@@ -1,0 +1,60 @@
+"""LM-substrate micro-benchmarks (framework layers around the paper's op):
+smoke-scale train-step and decode-step wall time per architecture family,
+plus the tap-decomposed conv1d vs its reference inside the SSM block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.configs.base import get_config, smoke_variant
+from repro.models import lm
+from repro.launch.steps import make_train_step
+from repro.optim import adamw_init
+
+ARCHS_QUICK = ["qwen2-1.5b", "mamba2-1.3b", "deepseek-moe-16b",
+               "jamba-v0.1-52b"]
+
+
+def run(quick=True):
+    rows = ["# lm_substrate: name,us_per_call,derived (smoke configs, CPU)"]
+    rng = np.random.default_rng(0)
+    archs = ARCHS_QUICK if quick else sorted(
+        __import__("repro.configs.base", fromlist=["list_archs"]).list_archs())
+    for arch in archs:
+        cfg = dataclasses.replace(smoke_variant(get_config(arch)),
+                                  grad_accum=1)
+        params = lm.init_lm(cfg, jax.random.PRNGKey(0))
+        B, S = 4, 32
+        batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (B, S)), jnp.int32)}
+        if cfg.input_mode == "tokens":
+            batch["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        else:
+            batch["embeds"] = jnp.asarray(
+                rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+            if cfg.mrope_sections:
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(S, dtype=jnp.int32), (3, B, S))
+        state = {"params": params, "opt": adamw_init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        step = jax.jit(make_train_step(cfg))
+        t = time_fn(lambda s=state, b=batch: step(s, b)[1]["loss"],
+                    repeats=3, warmup=1)
+        tok_s = B * S / (t / 1e6)
+        rows.append(csv_row(f"lm/{arch}/train_step_smoke", t,
+                            f"tokens_per_s={tok_s:.0f}"))
+    # conv1d tap kernel vs jnp ref (the paper's technique inside Mamba)
+    from repro.kernels import ops, ref
+    x = jnp.asarray(rng.normal(size=(4, 512, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(4, 128)), jnp.float32)
+    t_ref = time_fn(jax.jit(ref.conv1d_ref), x, w, repeats=3, warmup=1)
+    rows.append(csv_row("lm/conv1d_tap_jnp_ref", t_ref,
+                        "XLA-fused tap decomposition (B=4,L=512,D=128)"))
+    return rows

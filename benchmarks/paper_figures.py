@@ -1,0 +1,94 @@
+"""Paper figures 5/6/7: speedup of cuConv vs the best library convolution,
+by filter size (1x1 / 3x3 / 5x5), across CNN configs x batch sizes.
+
+The paper compares against the best of all cuDNN variants on V100; this
+CPU container's analogue is the best of {lax (library), im2col (explicit
+GEMM)} — relative *algorithm* behaviour on XLA:CPU, not TPU wall-clock
+(DESIGN.md §6).  ``quick`` benchmarks a stratified subset (the paper's
+profiled configs + spread across nets/batches); ``full`` sweeps all
+distinct configs x (1, 8, 16) batches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.configs import cnn_paper as cp
+from repro.core import cuconv as cc
+
+QUICK_SET = [
+    # (hw, k, M, C) drawn from the paper's profiled configs + coverage
+    (7, 1, 256, 832),      # t3 A: paper's 2.29x headline config
+    (14, 1, 1024, 256),    # t3 B
+    (27, 1, 256, 64),      # t3 C
+    (7, 3, 384, 192),      # t4 A
+    (13, 3, 384, 384),     # t4 B
+    (7, 5, 128, 48),       # t5 A/B
+    (55, 1, 64, 16),       # squeezenet early
+    (56, 3, 192, 64),      # googlenet conv3
+    (14, 3, 512, 512),     # vgg19 late
+]
+QUICK_BATCHES = (1, 8)
+
+
+def _bench_config(hw, k, M, C, batch, rng):
+    x = jnp.asarray(rng.normal(size=(batch, hw, hw, C)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, k, C, M)), jnp.float32)
+    pad = "same"
+    algos = {
+        "lax": cc.conv_lax,
+        "im2col": cc.conv_im2col,
+        "cuconv": cc.conv_cuconv,
+        "cuconv_two_stage": cc.conv_cuconv_two_stage,
+    }
+    if k == 3:
+        algos["winograd"] = cc.ALGORITHMS["winograd"]
+    times = {}
+    for name, fn in algos.items():
+        f = jax.jit(functools.partial(fn, stride=1, padding=pad))
+        times[name] = time_fn(f, x, w, repeats=3, warmup=1)
+    return times
+
+
+def run(quick=True):
+    rng = np.random.default_rng(0)
+    rows = ["# fig567_speedup: name,us_per_call,derived "
+            "(speedup = best-library / cuconv)"]
+    if quick:
+        configs = QUICK_SET
+        batches = QUICK_BATCHES
+    else:
+        configs = cp.all_distinct()
+        batches = (1, 8, 16)
+    wins, total = 0, 0
+    by_k = {}
+    for (hw, k, M, C) in configs:
+        for b in batches:
+            t = _bench_config(hw, k, M, C, b, rng)
+            lib_best = min(v for n, v in t.items()
+                           if n not in ("cuconv", "cuconv_two_stage"))
+            speedup = lib_best / t["cuconv"]
+            total += 1
+            wins += speedup > 1.0
+            by_k.setdefault(k, []).append(speedup)
+            wino = (f" winograd={t['winograd']:.0f}us"
+                    if "winograd" in t else "")
+            rows.append(csv_row(
+                f"fig{5 if k == 1 else (6 if k == 3 else 7)}/"
+                f"{hw}-{M}-{C}-b{b}", t["cuconv"],
+                f"speedup={speedup:.2f} lax={t['lax']:.0f}us "
+                f"im2col={t['im2col']:.0f}us "
+                f"two_stage={t['cuconv_two_stage']:.0f}us" + wino))
+    for k, sp in sorted(by_k.items()):
+        rows.append(csv_row(
+            f"fig567/summary_{k}x{k}", 0.0,
+            f"mean_speedup={np.mean(sp):.2f} max={np.max(sp):.2f} "
+            f"n={len(sp)}"))
+    rows.append(csv_row("fig567/summary_overall", 0.0,
+                        f"faster_frac={wins/max(total,1)*100:.1f}% "
+                        f"(paper: 8.31% on V100 vs best cuDNN)"))
+    return rows

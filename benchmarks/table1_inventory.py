@@ -1,0 +1,27 @@
+"""Paper Table 1: inventory of the five CNNs' convolution configurations.
+
+Derived (no timing): distinct-config counts and filter-size fractions,
+reconstructed from the public architecture definitions (the paper's exact
+list lives in its ref [11]; counts match Table 1, GoogleNet within a few
+— see EXPERIMENTS.md §Paper-repro).
+"""
+from __future__ import annotations
+
+from repro.configs import cnn_paper as cp
+from benchmarks.common import csv_row
+
+
+def run(quick=True):
+    rows = ["# table1_inventory: name,us_per_call,derived"]
+    paper_counts = {"googlenet": 42, "squeezenet": 21, "alexnet": 4,
+                    "resnet50": 12, "vgg19": 9}
+    for net, convs in cp.NETWORKS.items():
+        fr = cp.filter_size_fractions(net)
+        frs = " ".join(f"{k}x{k}:{v*100:.1f}%" for k, v in fr.items())
+        rows.append(csv_row(
+            f"table1/{net}", 0.0,
+            f"distinct={len(convs)} paper={paper_counts[net]} {frs}"))
+    rows.append(csv_row("table1/total_distinct", 0.0,
+                        f"{len(cp.all_distinct())} (paper >600 incl. "
+                        f"batch-size sweep {len(cp.all_distinct()) * len(cp.BATCH_SIZES)})"))
+    return rows

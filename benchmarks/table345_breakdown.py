@@ -1,0 +1,56 @@
+"""Paper tables 3/4/5: per-kernel time breakdown for the profiled configs.
+
+Times our stage-1 / stage-2 split (the paper's scalar_prods_kernel /
+sum_kernel) against the library and explicit-GEMM baselines, plus the
+beyond-paper fused variant — reproducing the tables' structure: for 1x1
+configs stage 2 is absent; for KxK the paper found stage 1 dominates
+(91-99 %) and stage 2 is the small remainder.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.configs.cnn_paper import PROFILED
+from repro.core import cuconv as cc
+
+
+def run(quick=True):
+    rng = np.random.default_rng(0)
+    rows = ["# table345_breakdown: name,us_per_call,derived"]
+    for label, (hw, batch, k, M, C) in PROFILED.items():
+        x = jnp.asarray(rng.normal(size=(batch, hw, hw, C)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, k, C, M)), jnp.float32)
+        s1 = jax.jit(functools.partial(cc.cuconv_stage1, stride=1,
+                                       padding="same"))
+        t1 = time_fn(s1, x, w, repeats=3, warmup=1)
+        temps = s1(x, w)
+        if k > 1:
+            s2 = jax.jit(cc.cuconv_stage2)
+            t2 = time_fn(s2, temps, repeats=3, warmup=1)
+        else:
+            t2 = 0.0                      # paper: second kernel not needed
+        t_fused = time_fn(jax.jit(functools.partial(
+            cc.conv_cuconv, stride=1, padding="same")), x, w,
+            repeats=3, warmup=1)
+        t_lax = time_fn(jax.jit(functools.partial(
+            cc.conv_lax, stride=1, padding="same")), x, w,
+            repeats=3, warmup=1)
+        t_im2col = time_fn(jax.jit(functools.partial(
+            cc.conv_im2col, stride=1, padding="same")), x, w,
+            repeats=3, warmup=1)
+        stage1_frac = t1 / max(t1 + t2, 1e-9) * 100
+        rows.append(csv_row(f"t345/{label}/stage1", t1,
+                            f"{stage1_frac:.1f}% of two-stage total"))
+        if k > 1:
+            rows.append(csv_row(f"t345/{label}/stage2", t2,
+                                f"{100-stage1_frac:.1f}%"))
+        rows.append(csv_row(f"t345/{label}/fused", t_fused,
+                            f"fusion_gain={(t1+t2)/max(t_fused,1e-9):.2f}x"))
+        rows.append(csv_row(f"t345/{label}/library", t_lax, ""))
+        rows.append(csv_row(f"t345/{label}/im2col_gemm", t_im2col, ""))
+    return rows

@@ -1,0 +1,31 @@
+"""Quickstart: the cuConv public API in 30 lines.
+
+Runs one convolution through every algorithm (library baseline, explicit
+GEMM, the paper's two-stage cuConv, the fused beyond-paper variant, and
+the Pallas TPU kernel in interpret mode) and checks they agree; then uses
+the cuDNN-style per-layer autotuner.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conv2d, ALGORITHMS
+from repro.core.autotune import select_algorithm, measure_algorithm
+
+rng = np.random.default_rng(0)
+# the paper's headline configuration: 7x7x832 input, 256 1x1 filters,
+# batch 1 (GoogleNet inception 5a) — cuConv's 2.29x region on V100
+x = jnp.asarray(rng.normal(size=(1, 7, 7, 832)), jnp.float32)
+w = jnp.asarray(rng.normal(size=(1, 1, 832, 256)), jnp.float32)
+
+ref = conv2d(x, w, algorithm="lax")
+print(f"output shape: {ref.shape}")
+for name in ALGORITHMS:
+    out = conv2d(x, w, algorithm=name)
+    err = float(jnp.abs(out - ref).max())
+    print(f"  {name:18s} max_err_vs_library = {err:.2e}")
+
+heur = select_algorithm(x.shape, w.shape)
+best = measure_algorithm(x, w)
+print(f"autotune heuristic: {heur}   measured best on this machine: {best}")

@@ -1,0 +1,45 @@
+"""Batched serving example: continuous-batching engine over a small LM.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-1.3b]
+
+Submits 10 requests onto 4 slots (wave-based continuous batching),
+decodes greedily, prints per-request outputs and throughput.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, list_archs, smoke_variant
+from repro.models import lm
+from repro.serve import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config(args.arch))
+    params = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=4, max_len=64)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size,
+                                               16).astype(np.int32),
+                           max_new_tokens=12))
+    t0 = time.perf_counter()
+    done = eng.run(prompt_len=16)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"  req {r.rid}: {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: cuConv-on-TPU framework (JAX + Pallas)."""
+__version__ = "1.0.0"

@@ -1,0 +1,11 @@
+from repro.configs import base  # noqa: F401
+from repro.configs.base import get_config, list_archs, smoke_variant, SHAPES  # noqa: F401
+
+_LOADED = False
+
+def load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import archs, cnn_paper  # noqa: F401
+    _LOADED = True

@@ -1,0 +1,2 @@
+from repro.core.cuconv import (  # noqa: F401
+    conv2d, cuconv_stage1, cuconv_stage2, ALGORITHMS)

@@ -1,0 +1,198 @@
+"""cuConv: tap-decomposed direct convolution (the paper's contribution).
+
+The paper decomposes a KH x KW convolution by *filter tap*: stage 1
+computes, for every tap (i, j), the channel-axis dot product of filter
+row F[:, i, j] with every input row — a plain GEMM per tap, over data
+that is contiguous in the chosen layout with **no im2col transform**;
+stage 2 sums the KH*KW per-tap partial matrices.  1x1 filters skip
+stage 2 entirely (the paper's best-case region).
+
+TPU adaptation (DESIGN.md §2): NHWC instead of NCHW so the channel
+contraction is lane-contiguous; each per-tap GEMM maps onto the MXU.
+
+All algorithms below are numerically equivalent (property-tested):
+
+  lax              jax.lax.conv_general_dilated — the library baseline
+                   (the cuDNN stand-in of the paper's comparison)
+  im2col           explicit patch matrix + one GEMM — cuDNN "GEMM" variant
+  cuconv_two_stage faithful paper algorithm: stage-1 temporaries
+                   materialized (KH*KW, N, OH, OW, M), stage-2 sum
+  cuconv           beyond-paper fused tap accumulation (no temporaries);
+                   the paper's "work-fusion" future-work realized
+  cuconv_pallas    the fused Pallas TPU kernel (stride 1)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Pad = Union[int, Tuple[int, int], str]
+
+
+def _norm_pad(padding: Pad, kh: int, kw: int) -> Tuple[int, int]:
+    if padding == "same":
+        return (kh - 1) // 2, (kw - 1) // 2
+    if padding == "valid":
+        return 0, 0
+    if isinstance(padding, int):
+        return padding, padding
+    return tuple(padding)  # type: ignore[return-value]
+
+
+def _out_size(h, kh, ph, s):
+    return (h + 2 * ph - kh) // s + 1
+
+
+def _pad_input(x, ph, pw):
+    if ph == 0 and pw == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+
+def conv_lax(x, w, stride=1, padding: Pad = "same"):
+    """Library convolution (XLA's native conv; the cuDNN analogue)."""
+    kh, kw = w.shape[0], w.shape[1]
+    ph, pw = _norm_pad(padding, kh, kw)
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=((ph, ph), (pw, pw)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv_im2col(x, w, stride=1, padding: Pad = "same"):
+    """Explicit-GEMM convolution: materialize the patch matrix, one GEMM.
+
+    This is the paper's "GEMM (explicit)" cuDNN baseline: the intermediate
+    matrix duplicates input elements KH*KW-fold — the memory cost cuConv
+    avoids.
+    """
+    kh, kw, C, M = w.shape
+    ph, pw = _norm_pad(padding, kh, kw)
+    xp = _pad_input(x, ph, pw)
+    N, Hp, Wp, _ = xp.shape
+    oh, ow = _out_size(x.shape[1], kh, ph, stride), _out_size(
+        x.shape[2], kw, pw, stride)
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(
+                xp, (0, i, j, 0),
+                (N, i + stride * (oh - 1) + 1, j + stride * (ow - 1) + 1, C),
+                (1, stride, stride, 1)))
+    patches = jnp.stack(cols, axis=3)                    # (N,OH,OW,KK,C)
+    patches = patches.reshape(N * oh * ow, kh * kw * C)  # materialized!
+    out = patches @ w.reshape(kh * kw * C, M)
+    return out.reshape(N, oh, ow, M)
+
+
+# ---------------------------------------------------------------------------
+# cuConv: the paper's two stages
+
+def _tap_views(xp, kh, kw, oh, ow, stride):
+    """The KH*KW shifted input views (XLA slices, nothing materialized)."""
+    N, _, _, C = xp.shape
+    views = []
+    for i in range(kh):
+        for j in range(kw):
+            views.append(jax.lax.slice(
+                xp, (0, i, j, 0),
+                (N, i + stride * (oh - 1) + 1, j + stride * (ow - 1) + 1, C),
+                (1, stride, stride, 1)))
+    return views
+
+
+def cuconv_stage1(x, w, stride=1, padding: Pad = "same"):
+    """Stage 1: per-tap channel contraction.
+
+    Returns the paper's temporary tensor of shape (KH*KW, N, OH, OW, M):
+    one (OH x OW) partial-result matrix per (tap, input, filter) triple.
+    """
+    kh, kw, C, M = w.shape
+    ph, pw = _norm_pad(padding, kh, kw)
+    xp = _pad_input(x, ph, pw)
+    oh = _out_size(x.shape[1], kh, ph, stride)
+    ow = _out_size(x.shape[2], kw, pw, stride)
+    views = _tap_views(xp, kh, kw, oh, ow, stride)
+    taps = w.reshape(kh * kw, C, M)
+    outs = [jnp.einsum("nhwc,cm->nhwm", v, taps[t],
+                       preferred_element_type=jnp.float32)
+            for t, v in enumerate(views)]
+    return jnp.stack(outs, axis=0)
+
+
+def cuconv_stage2(temps):
+    """Stage 2: sum the KH*KW per-tap partial matrices."""
+    return jnp.sum(temps, axis=0)
+
+
+def conv_cuconv_two_stage(x, w, stride=1, padding: Pad = "same"):
+    """Faithful paper pipeline: materialized temporaries + separate sum.
+
+    For 1x1 filters stage 2 is skipped (paper §3): stage 1's output *is*
+    the convolution.
+    """
+    kh, kw = w.shape[0], w.shape[1]
+    temps = cuconv_stage1(x, w, stride, padding)
+    if kh == 1 and kw == 1:
+        return temps[0].astype(x.dtype)
+    return cuconv_stage2(temps).astype(x.dtype)
+
+
+def conv_cuconv(x, w, stride=1, padding: Pad = "same"):
+    """Fused tap accumulation (beyond-paper; no HBM temporaries)."""
+    kh, kw, C, M = w.shape
+    ph, pw = _norm_pad(padding, kh, kw)
+    xp = _pad_input(x, ph, pw)
+    oh = _out_size(x.shape[1], kh, ph, stride)
+    ow = _out_size(x.shape[2], kw, pw, stride)
+    taps = w.reshape(kh * kw, C, M)
+    acc = None
+    for t, v in enumerate(_tap_views(xp, kh, kw, oh, ow, stride)):
+        y = jnp.einsum("nhwc,cm->nhwm", v, taps[t],
+                       preferred_element_type=jnp.float32)
+        acc = y if acc is None else acc + y
+    return acc.astype(x.dtype)
+
+
+def conv_cuconv_pallas(x, w, stride=1, padding: Pad = "same",
+                       interpret: Optional[bool] = None):
+    """Fused Pallas TPU kernel (stride 1); falls back to jnp otherwise."""
+    from repro.kernels import ops
+    if stride != 1:
+        return conv_cuconv(x, w, stride, padding)
+    kh, kw = w.shape[0], w.shape[1]
+    ph, pw = _norm_pad(padding, kh, kw)
+    return ops.cuconv_fused(x, w, (ph, pw), interpret=interpret)
+
+
+def conv_winograd_or_fallback(x, w, stride=1, padding: Pad = "same"):
+    """Winograd F(2x2,3x3) for 3x3/stride-1, library conv otherwise —
+    mirrors cuDNN exposing Winograd only where it is defined."""
+    if w.shape[0] == 3 and w.shape[1] == 3 and stride == 1:
+        from repro.core.winograd import conv_winograd
+        return conv_winograd(x, w, stride, padding)
+    return conv_lax(x, w, stride, padding)
+
+
+ALGORITHMS = {
+    "lax": conv_lax,
+    "im2col": conv_im2col,
+    "winograd": conv_winograd_or_fallback,
+    "cuconv_two_stage": conv_cuconv_two_stage,
+    "cuconv": conv_cuconv,
+    "cuconv_pallas": conv_cuconv_pallas,
+}
+
+
+def conv2d(x, w, stride=1, padding: Pad = "same", algorithm="auto"):
+    """Public conv entry point.  x: (N,H,W,C) NHWC; w: (KH,KW,C,M) HWIO."""
+    if algorithm == "auto":
+        from repro.core.autotune import select_algorithm
+        algorithm = select_algorithm(x.shape, w.shape, stride)
+    return ALGORITHMS[algorithm](x, w, stride, padding)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLMData, FileLMData  # noqa: F401

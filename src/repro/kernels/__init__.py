@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the perf-critical hot spots (conv + attention).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), wrapped in ops.py,
+with a pure-jnp oracle in ref.py.  Validated in interpret mode on CPU.
+"""

@@ -1,0 +1,87 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to auto: Python-interpret mode on CPU (this
+container), compiled Mosaic on a real TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (conv1x1 as _c1, cuconv_stage1 as _s1,
+                           cuconv_stage2 as _s2, cuconv_fused as _cf,
+                           conv1d_tap as _c1d, flash_attention as _fa)
+
+_FUSED_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def conv1x1(x, w, interpret=None):
+    """x: (N, H, W, C); w: (1, 1, C, M) or (C, M)."""
+    if w.ndim == 4:
+        w = w[0, 0]
+    N, H, W_, C = x.shape
+    out = _c1.conv1x1_gemm(x.reshape(N * H * W_, C), w,
+                           interpret=_auto_interpret(interpret))
+    return out.reshape(N, H, W_, -1)
+
+
+def cuconv_two_stage(x, w, padding=(0, 0), interpret=None):
+    """Faithful two-kernel cuConv (stride 1): HBM temporaries + sum."""
+    from repro.core.cuconv import _tap_views  # shared view builder
+    interp = _auto_interpret(interpret)
+    N, H, W_, C = x.shape
+    KH, KW, _, M = w.shape
+    ph, pw = padding
+    if KH == 1 and KW == 1:
+        return conv1x1(x, w, interpret=interp)
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    OH, OW = H + 2 * ph - KH + 1, W_ + 2 * pw - KW + 1
+    views = _tap_views(xp, KH, KW, OH, OW, 1)
+    xs = jnp.stack([v.reshape(N * OH * OW, C) for v in views], 0)
+    temps = _s1.stage1_tap_gemm(xs, w.reshape(KH * KW, C, M),
+                                interpret=interp)
+    out = _s2.stage2_tap_sum(temps, interpret=interp)
+    return out.reshape(N, OH, OW, M).astype(x.dtype)
+
+
+def cuconv_fused(x, w, padding=(0, 0), interpret=None):
+    """Single-kernel fused cuConv (stride 1)."""
+    interp = _auto_interpret(interpret)
+    KH, KW, C, M = w.shape
+    if KH == 1 and KW == 1:
+        return conv1x1(x, w, interpret=interp)
+    if _cf.vmem_bytes(x.shape, w.shape, pad=padding) > _FUSED_VMEM_BUDGET:
+        # working row too large for VMEM: fall back to the two-stage path
+        return cuconv_two_stage(x, w, padding, interpret=interp)
+    return _cf.cuconv_fused(x, w, padding, interpret=interp)
+
+
+def conv1d_causal(x, w, b=None, interpret=None):
+    return _c1d.conv1d_tap(x, w, b, interpret=_auto_interpret(interpret))
+
+
+def flash_attention(q, k, v, causal=True, interpret=None):
+    """q: (B, Sq, H, D) or (BH, Sq, D); GQA KV broadcast handled here."""
+    interp = _auto_interpret(interpret)
+    if q.ndim == 4:
+        B, Sq, H, D = q.shape
+        KVH = k.shape[2]
+        if KVH != H:
+            rep = H // KVH
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+        out = _fa.flash_attention(qf, kf, vf, causal=causal, interpret=interp)
+        return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    return _fa.flash_attention(q, k, v, causal=causal, interpret=interp)

@@ -1,0 +1,347 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell this lowers + compiles
+the real step function against 512 placeholder CPU devices arranged as
+the production mesh, then records memory_analysis / cost_analysis /
+per-collective byte counts for the roofline (EXPERIMENTS.md §Dry-run,
+§Roofline).  No arrays are ever allocated: params, optimizer state,
+caches and batches are ShapeDtypeStructs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--resume]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.dist import sharding as sh
+from repro.launch import steps as St
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+
+# long-context decode is only defined for sub-quadratic archs (DESIGN.md)
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_defined(cfg, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.family in LONG_OK_FAMILIES
+    return True
+
+
+# ---------------------------------------------------------------------------
+# collective parsing
+
+_COLL_RE = re.compile(
+    r"%(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=\s*(.+)")
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64)"
+                       r"\[([\d,]*)\]")
+
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum of *output* shape bytes per collective kind (per-device HLO).
+
+    Partitioned HLO lines look like
+      %all-gather.46 = f32[16,4096,1,128]{...} all-gather(%x), ...
+    so the output type sits between '=' and the op-kind keyword.  Only
+    definition lines (var name matches the kind) are counted, which
+    skips -done halves of async pairs and operand mentions.
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind, rhs = m.group(1), m.group(2)
+        # rhs starts at the output type; cut at the op keyword
+        cut = rhs.find(f" {kind}")
+        typ = rhs if cut < 0 else rhs[:cut]
+        b = _shape_bytes(typ)
+        if b == 0:
+            continue
+        d = out.setdefault(kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lowering per cell
+
+def probe_variant(cfg, n_periods: int):
+    """Unrolled small-stack twin of cfg for exact HLO cost accounting.
+
+    XLA's HloCostAnalysis counts while-loop bodies ONCE (verified:
+    28-layer vs 14-layer scanned models report equal flops), so costs are
+    measured on unrolled 1-period and 2-period stacks and extrapolated
+    linearly — exact for flops/bytes/collectives, since every period
+    contributes an identical HLO slice.
+    """
+    import dataclasses
+    kw = dict(scan_layers=False, attn_impl="chunked_unrolled", grad_accum=1)
+    if cfg.first_layer_dense:
+        # probe as uniform MoE stack; layer-0 dense MLP (10944) has nearly
+        # the same cost as shared+routed-active (see DESIGN.md note)
+        kw["first_layer_dense"] = False
+    c0 = dataclasses.replace(cfg, **kw)
+    period = c0.pattern_period or 1
+    return dataclasses.replace(c0, num_layers=period * n_periods), period
+
+
+def apply_overrides(cfg, overrides):
+    """--set key=value config variants (the §Perf hillclimb entry point)."""
+    import dataclasses
+    if not overrides:
+        return cfg
+    kw = {}
+    for kv in overrides:
+        k, v = kv.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            v = v.lower() in ("1", "true", "yes")
+        elif isinstance(cur, int):
+            v = int(v)
+        elif isinstance(cur, float):
+            v = float(v)
+        kw[k] = v
+    return dataclasses.replace(cfg, **kw)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, cfg=None,
+               act_seq_shard: bool = False):
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    long_ctx = shape_name == "long_500k"
+    rules = sh.make_rules(shape.kind, multi_pod, long_context=long_ctx)
+
+    batch_shapes = St.input_specs(cfg, shape)
+    bspecs = sh.batch_specs(batch_shapes, rules)
+
+    nm = lambda tree: sh.named(mesh, tree)
+    # sequence-sharded residual stream ("SP"): halves TP collective bytes
+    # by turning per-layer all-reduce into reduce-scatter + all-gather
+    act_spec = nm(sh.P(rules["batch"], "model", None) if act_seq_shard
+                  else sh.P(rules["batch"], None, None))
+    dp = (mesh.shape["data"] * mesh.shape.get("pod", 1)
+          if not (shape_name == "long_500k") else 1)
+    with mesh:
+        if shape.kind == "train":
+            state_shapes = St.state_specs(cfg)
+            pspecs = sh.param_specs(state_shapes["params"], rules)
+            sspecs = {"params": pspecs, "opt": sh.opt_specs(pspecs),
+                      "step": sh.P()}
+            step = St.make_train_step(cfg, act_spec=act_spec, moe_groups=dp)
+            jitted = jax.jit(step,
+                             in_shardings=(nm(sspecs), nm(bspecs)),
+                             out_shardings=(nm(sspecs), None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, batch_shapes)
+        else:
+            params_shapes = jax.eval_shape(
+                lambda: lm.init_lm(cfg, jax.random.PRNGKey(0)))
+            pspecs = sh.param_specs(params_shapes, rules)
+            cache_shapes = lm.cache_shapes(cfg, shape.global_batch,
+                                           shape.seq_len)
+            cspecs = sh.cache_specs(cache_shapes, cfg, rules)
+            logit_spec = sh.P(rules["batch"], "model")
+            if shape.kind == "prefill":
+                step = St.make_prefill_step(cfg, shape.seq_len,
+                                            act_spec=act_spec, moe_groups=dp)
+                jitted = jax.jit(step,
+                                 in_shardings=(nm(pspecs), nm(bspecs),
+                                               nm(cspecs)),
+                                 out_shardings=(nm(logit_spec), nm(cspecs)),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(params_shapes, batch_shapes,
+                                       cache_shapes)
+            else:
+                step = St.make_decode_step(cfg, act_spec=act_spec)
+                jitted = jax.jit(step,
+                                 in_shardings=(nm(pspecs), nm(bspecs),
+                                               nm(cspecs), nm(sh.P())),
+                                 out_shardings=(nm(logit_spec), nm(cspecs)),
+                                 donate_argnums=(2,))
+                offset = jax.ShapeDtypeStruct((), jnp.int32)
+                lowered = jitted.lower(params_shapes, batch_shapes,
+                                       cache_shapes, offset)
+        compiled = lowered.compile()
+    return cfg, shape, mesh, lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             verbose=True, overrides=None, act_seq_shard=False,
+             variant: str = ""):
+    t0 = time.time()
+    cfg = apply_overrides(get_config(arch), overrides)
+    tag = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'pod'}"
+    if variant:
+        tag += f"__{variant}"
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not cell_defined(cfg, shape_name):
+        rec["status"] = "SKIP(full-attn)"
+        (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+        print(f"[dryrun] {tag}: SKIP (full-attention arch, long_500k "
+              "needs sub-quadratic path; see DESIGN.md)")
+        return rec
+    try:
+        cfg, shape, mesh, lowered, compiled = lower_cell(
+            arch, shape_name, multi_pod, cfg=cfg,
+            act_seq_shard=act_seq_shard)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        colls = collective_bytes(hlo)
+        n_dev = mesh.devices.size
+
+        # cost probes: unrolled 1- and 2-period stacks -> exact totals
+        probe = {}
+        try:
+            pc1, period = probe_variant(cfg, 1)
+            pc2, _ = probe_variant(cfg, 2)
+            n_periods = cfg.num_layers // period
+            *_, comp1 = lower_cell(arch, shape_name, multi_pod, cfg=pc1,
+                                   act_seq_shard=act_seq_shard)
+            *_, comp2 = lower_cell(arch, shape_name, multi_pod, cfg=pc2,
+                                   act_seq_shard=act_seq_shard)
+            c1, c2 = comp1.cost_analysis(), comp2.cost_analysis()
+            cb1 = collective_bytes(comp1.as_text())
+            cb2 = collective_bytes(comp2.as_text())
+            ext = lambda a, b: a + (n_periods - 1) * (b - a)
+            probe = {
+                "period": period,
+                "n_periods": n_periods,
+                "flops_total_per_device": ext(c1.get("flops", 0.0),
+                                              c2.get("flops", 0.0)),
+                "bytes_total_per_device": ext(c1.get("bytes accessed", 0.0),
+                                              c2.get("bytes accessed", 0.0)),
+                "collective_bytes_total_per_device": ext(
+                    sum(v["bytes"] for v in cb1.values()),
+                    sum(v["bytes"] for v in cb2.values())),
+                "collectives_by_kind": {
+                    k: ext(cb1.get(k, {}).get("bytes", 0),
+                           cb2.get(k, {}).get("bytes", 0))
+                    for k in set(cb1) | set(cb2)},
+            }
+        except Exception as pe:  # noqa: BLE001
+            probe = {"error": f"{type(pe).__name__}: {pe}"}
+
+        rec.update({
+            "status": "OK",
+            "devices": n_dev,
+            "compile_s": round(time.time() - t0, 1),
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+            "collectives": colls,
+            "collective_bytes_per_device": sum(
+                v["bytes"] for v in colls.values()),
+            "probe": probe,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0)
+                               + getattr(mem, "argument_size_in_bytes", 0)),
+            },
+            "params": cfg.num_params(),
+            "active_params": cfg.num_active_params(),
+            "tokens": shape.global_batch * (shape.seq_len
+                                            if shape.kind != "decode" else 1),
+            "kind": shape.kind,
+        })
+        if verbose:
+            print(f"[dryrun] {tag}: OK in {rec['compile_s']}s  "
+                  f"flops/dev={rec['flops_per_device']:.3e}  "
+                  f"bytes/dev={rec['bytes_accessed_per_device']:.3e}  "
+                  f"coll_bytes/dev={rec['collective_bytes_per_device']:.3e}  "
+                  f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {tag}: FAIL {type(e).__name__}: {str(e)[:300]}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose artifact already exists and is OK")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="config override key=value (repeatable); "
+                         "e.g. --set ce_impl=chunked --set remat=dots")
+    ap.add_argument("--act-seq-shard", action="store_true",
+                    help="sequence-shard the residual stream over 'model'")
+    ap.add_argument("--variant", default="",
+                    help="tag appended to the artifact name")
+    args = ap.parse_args(argv)
+    out_dir = Path(args.out)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multipod' if mp else 'pod'}"
+                if args.variant:
+                    tag += f"__{args.variant}"
+                f = out_dir / f"{tag}.json"
+                if args.resume and f.exists():
+                    rec = json.loads(f.read_text())
+                    if rec.get("status", "").startswith(("OK", "SKIP")):
+                        print(f"[dryrun] {tag}: cached ({rec['status']})")
+                        results.append(rec)
+                        continue
+                results.append(run_cell(
+                    arch, shape, mp, out_dir, overrides=args.overrides,
+                    act_seq_shard=args.act_seq_shard, variant=args.variant))
+    bad = [r for r in results if r["status"].startswith("FAIL")]
+    print(f"[dryrun] done: {len(results)} cells, {len(bad)} failures")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Production mesh definitions.
+
+Single pod: (16, 16) = 256 chips, axes ('data', 'model') — TP inside the
+fast ICI dimension, FSDP over 'data'.  Multi-pod: (2, 16, 16) = 512
+chips, axes ('pod', 'data', 'model') — only gradient all-reduce (train)
+or pure batch parallelism (serve) crosses the slow 'pod' (DCN-class)
+axis.  Defined as functions so importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, model: int = 2):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

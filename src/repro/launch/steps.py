@@ -1,0 +1,131 @@
+"""Step functions (train / prefill / decode) + ShapeDtypeStruct input specs.
+
+These are the exact callables the dry-run lowers and the real launchers
+execute; nothing here allocates device memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.optim import adamw_update, cosine_schedule
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; weak-type-correct, shardable)
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    batch: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        # modality frontend stub: precomputed frame/patch embeddings
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16)
+    if cfg.mrope_sections:
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return batch
+
+
+def state_specs(cfg: ModelConfig, key=None) -> Dict[str, Any]:
+    """Abstract train state (params + opt + step) via eval_shape."""
+    key = jax.random.PRNGKey(0)
+
+    def build():
+        params = lm.init_lm(cfg, key)
+        from repro.optim import adamw_init
+        return {"params": params, "opt": adamw_init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    return jax.eval_shape(build)
+
+
+# ---------------------------------------------------------------------------
+# steps
+
+def make_train_step(cfg: ModelConfig, peak_lr=3e-4, total_steps=10_000,
+                    act_spec=None, moe_groups=1, grad_compression=False):
+    """grad_compression: int8 + error feedback applied to the gradient
+    before the optimizer (the EF residual rides in state['ef']); the int8
+    payload is what a DCN transport would move cross-pod (dist/compress).
+    """
+    accum = max(1, cfg.grad_accum)
+
+    def loss_fn(params, micro):
+        return lm.train_loss(params, cfg, micro, act_spec=act_spec,
+                             moe_groups=moe_groups)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum > 1:
+            def split_batch(b):
+                out = {}
+                for k, v in b.items():
+                    if k == "positions" and v.ndim == 3:
+                        # (3, B, S): batch axis is dim 1 (M-RoPE layout)
+                        a = v.reshape(v.shape[0], accum,
+                                      v.shape[1] // accum, v.shape[2])
+                        out[k] = jnp.moveaxis(a, 1, 0)
+                    else:
+                        out[k] = v.reshape((accum, v.shape[0] // accum)
+                                           + v.shape[1:])
+                return out
+            micros = split_batch(batch)
+
+            def body(carry, micro):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, micro)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            g0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)),
+                                           micros)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        lr = cosine_schedule(state["step"], peak_lr=peak_lr,
+                             total_steps=total_steps)
+        extra = {}
+        if grad_compression:
+            from repro.dist import compress as C
+            grads, new_ef = C.tree_quantize_with_feedback(grads, state["ef"])
+            extra["ef"] = new_ef
+        new_params, new_opt, om = adamw_update(params, grads, state["opt"],
+                                               state["step"], lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1, **extra}
+        return new_state, {"loss": loss, "lr": lr, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, act_spec=None,
+                      moe_groups=1):
+    def prefill_step(params, batch, cache):
+        logits, new_cache = lm.prefill(params, cfg, batch, cache,
+                                       act_spec=act_spec,
+                                       moe_groups=moe_groups)
+        # serving returns only the last-position logits (next-token dist)
+        return logits[:, -1, :], new_cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, act_spec=None):
+    def decode_step(params, batch, cache, offset):
+        logits, new_cache = lm.decode_step(params, cfg, batch, cache, offset,
+                                           act_spec=act_spec)
+        return logits[:, -1, :], new_cache
+    return decode_step

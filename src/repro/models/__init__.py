@@ -1,0 +1,1 @@
+from repro.models import lm, cnn  # noqa: F401

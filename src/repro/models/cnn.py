@@ -1,0 +1,73 @@
+"""CNN inference graphs over the cuConv core (the paper's own domain).
+
+The paper evaluates standalone convolution configurations drawn from five
+CNNs; this module provides (a) a runnable sequential CNN for the
+end-to-end inference example and (b) per-layer conv execution with the
+cuDNN-style per-layer algorithm selection the paper's deployment story
+relies on.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cuconv
+from repro.core.autotune import select_algorithm
+
+
+def init_conv(key, kh, kw, c_in, c_out, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(kh * kw * c_in)
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (kh, kw, c_in, c_out), dtype) * scale,
+        "b": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv_block(p, x, stride=1, padding="same", algorithm="auto"):
+    y = cuconv.conv2d(x, p["w"], stride, padding, algorithm)
+    return jax.nn.relu(y + p["b"])
+
+
+def maxpool(x, k=2, s=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+class SimpleCNN:
+    """Sequential conv stack + GAP head; spec: [(kh, kw, c_out, stride), ...]."""
+
+    def __init__(self, spec: Sequence[Tuple[int, int, int, int]],
+                 num_classes: int = 10, in_channels: int = 3):
+        self.spec, self.num_classes, self.in_channels = (
+            tuple(spec), num_classes, in_channels)
+
+    def init(self, key):
+        params: List = []
+        c = self.in_channels
+        keys = jax.random.split(key, len(self.spec) + 1)
+        for i, (kh, kw, co, s) in enumerate(self.spec):
+            params.append(init_conv(keys[i], kh, kw, c, co))
+            c = co
+        head = (jax.random.normal(keys[-1], (c, self.num_classes), jnp.float32)
+                / np.sqrt(c))
+        return {"convs": params, "head": head}
+
+    def apply(self, params, x, algorithm="auto"):
+        for p, (kh, kw, co, s) in zip(params["convs"], self.spec):
+            x = conv_block(p, x, stride=s, algorithm=algorithm)
+        x = x.mean(axis=(1, 2))                       # global average pool
+        return x @ params["head"]
+
+
+def squeezenet_like():
+    """Small SqueezeNet-flavoured stack (1x1-heavy: cuConv's best region)."""
+    return SimpleCNN([
+        (3, 3, 64, 2),
+        (1, 1, 16, 1), (1, 1, 64, 1), (3, 3, 64, 1),
+        (1, 1, 32, 1), (1, 1, 128, 1), (3, 3, 128, 1),
+        (1, 1, 48, 1), (1, 1, 192, 1), (3, 3, 192, 1),
+    ])

@@ -1,0 +1,364 @@
+"""Causal LM assembly for all assigned architecture families.
+
+The layer stack is described by a *stack plan*: a list of segments, each
+``(repeats, kinds)`` where ``kinds`` is the repeating period of
+(mixer, mlp) pairs.  Uniform models have one segment of period 1 and are
+``lax.scan``-ed over all layers (keeps HLO small enough to compile 88-layer
+models for 512 SPMD devices on one CPU core).  Jamba scans over 4 repeats
+of its 8-layer period; deepseek-moe unrolls its dense first layer and
+scans the remaining 27 MoE layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, SSM, DENSE, MOE, ModelConfig
+from repro.nn import layers as L
+from repro.nn import attention as A
+from repro.nn import moe as M
+from repro.nn import mamba as S
+
+
+# ---------------------------------------------------------------------------
+# Stack plan
+
+def stack_plan(cfg: ModelConfig) -> List[Tuple[int, Tuple[Tuple[str, str], ...]]]:
+    kinds = cfg.layer_kinds()
+    n = cfg.num_layers
+    if cfg.first_layer_dense:
+        rest = kinds[1:]
+        assert all(k == rest[0] for k in rest), "unsupported irregular stack"
+        return [(1, (kinds[0],)), (n - 1, (rest[0],))]
+    p = cfg.pattern_period
+    if p == 0:
+        return [(1, (k,)) for k in kinds]          # fully unrolled
+    period = kinds[:p]
+    assert kinds == period * (n // p)
+    return [(n // p, period)]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / fwd
+
+def _layer_init(key, cfg, mixer, mlp):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": L.rmsnorm_init(cfg.d_model)}
+    if mixer == ATTN:
+        p["attn"] = A.mla_init(ks[0], cfg) if cfg.mla else A.gqa_init(ks[0], cfg)
+    else:
+        p["ssm"] = S.mamba_init(ks[0], cfg)
+    if mlp != "none":
+        p["ln2"] = L.rmsnorm_init(cfg.d_model)
+        if mlp == MOE:
+            p["moe"] = M.moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _layer_fwd(p, cfg, mixer, mlp, x, positions, cache, offset, mode,
+               moe_groups=1):
+    h = L.rmsnorm_fwd(p["ln1"], x, cfg.rms_norm_eps, cfg.norm_impl)
+    aux = {}
+    if mixer == ATTN:
+        fwd = A.mla_fwd if cfg.mla else A.gqa_fwd
+        out, new_cache = fwd(p["attn"], cfg, h, positions, cache, offset, mode)
+    else:
+        out, new_cache = S.mamba_fwd(p["ssm"], cfg, h, cache, mode)
+    x = x + out
+    if mlp != "none":
+        h2 = L.rmsnorm_fwd(p["ln2"], x, cfg.rms_norm_eps, cfg.norm_impl)
+        if mlp == MOE:
+            mo, aux = M.moe_fwd(p["moe"], cfg, h2,
+                                dropless=(mode == "decode"),
+                                n_groups=moe_groups)
+        else:
+            mo = L.mlp_fwd(p["mlp"], h2)
+        x = x + mo
+    return x, new_cache, aux
+
+
+def _period_init(key, cfg, kinds):
+    ks = jax.random.split(key, len(kinds))
+    return {f"pos{i}": _layer_init(ks[i], cfg, mx, ml)
+            for i, (mx, ml) in enumerate(kinds)}
+
+
+def _period_fwd(p, cfg, kinds, x, positions, caches, offset, mode,
+                moe_groups=1):
+    new_caches, aux_sum = {}, jnp.zeros((), jnp.float32)
+    dropped = jnp.zeros((), jnp.float32)
+    for i, (mx, ml) in enumerate(kinds):
+        c = caches.get(f"pos{i}") if caches is not None else None
+        x, nc, aux = _layer_fwd(p[f"pos{i}"], cfg, mx, ml, x, positions, c,
+                                offset, mode, moe_groups)
+        new_caches[f"pos{i}"] = nc
+        if aux:
+            aux_sum = aux_sum + aux["load_balance_loss"]
+            dropped = dropped + aux["dropped_frac"]
+    return x, new_caches, {"load_balance_loss": aux_sum, "dropped_frac": dropped}
+
+
+# ---------------------------------------------------------------------------
+# Model init
+
+def init_lm(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = L.embed_init(keys[0], cfg.padded_vocab, cfg.d_model)
+    params["segments"] = []
+    for si, (repeats, kinds) in enumerate(stack_plan(cfg)):
+        seg_keys = jax.random.split(keys[1 + (si % 6)], repeats)
+        if repeats == 1:
+            seg = _period_init(seg_keys[0], cfg, kinds)
+            seg = jax.tree.map(lambda a: a[None], seg)     # repeats dim = 1
+        else:
+            seg = jax.vmap(lambda k: _period_init(k, cfg, kinds))(seg_keys)
+        params["segments"].append(seg)
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[7], cfg.d_model, cfg.padded_vocab)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+
+def _layer_cache_shapes(cfg, mixer, batch, max_len, kv_dtype):
+    if mixer == ATTN:
+        if cfg.mla:
+            return jax.ShapeDtypeStruct(
+                (batch, max_len, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                kv_dtype)
+        return (
+            jax.ShapeDtypeStruct((batch, max_len, cfg.num_kv_heads,
+                                  cfg.head_dim), kv_dtype),
+            jax.ShapeDtypeStruct((batch, max_len, cfg.num_kv_heads,
+                                  cfg.head_dim), kv_dtype),
+        )
+    gn = cfg.ssm_groups * cfg.ssm_state
+    return (
+        (jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, cfg.d_inner), kv_dtype),
+         jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, gn), kv_dtype),
+         jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, gn), kv_dtype)),
+        jax.ShapeDtypeStruct((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+    )
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                 kv_dtype=jnp.bfloat16):
+    out = []
+    for repeats, kinds in stack_plan(cfg):
+        seg = {}
+        for i, (mx, _) in enumerate(kinds):
+            shapes = _layer_cache_shapes(cfg, mx, batch, max_len, kv_dtype)
+            seg[f"pos{i}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((repeats,) + s.shape, s.dtype),
+                shapes, is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+        out.append(seg)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, max_len, kv_dtype),
+                        is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+
+def lm_forward(params, cfg: ModelConfig, batch: Dict[str, Any],
+               cache=None, offset=0, mode="train", act_spec=None,
+               moe_groups=1, skip_head=False):
+    """Returns (logits, new_cache, aux).
+
+    batch: {'tokens': (B,S) int32} or {'embeds': (B,S,D)}; optional
+    'positions' ((B,S) or (3,B,S) for M-RoPE).
+    mode: "train" | "prefill" | "decode".
+    act_spec: optional PartitionSpec for (B, S, D) activations, pinned at
+    every layer boundary (see nn.layers.maybe_constrain).
+    """
+    if cfg.input_mode == "tokens":
+        x = L.embed_fwd(params["embed"], batch["tokens"])
+        B, Sq = batch["tokens"].shape
+    else:
+        # match the params' compute dtype (tests may cast params to f32)
+        pdt = (params["lm_head"]["w"].dtype if "lm_head" in params
+               else L.DEFAULT_DTYPE)
+        x = batch["embeds"].astype(pdt)
+        B, Sq = x.shape[0], x.shape[1]
+    x = L.maybe_constrain(x, act_spec)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = L.make_positions(B, Sq, offset)
+
+    new_cache_out, aux_tot = [], {"load_balance_loss": jnp.zeros((), jnp.float32),
+                                  "dropped_frac": jnp.zeros((), jnp.float32)}
+    for si, (repeats, kinds) in enumerate(stack_plan(cfg)):
+        seg_params = params["segments"][si]
+        seg_cache = cache[si] if cache is not None else None
+
+        def period_body(x_, p_, c_):
+            x_ = L.maybe_constrain(x_, act_spec)
+            out = _period_fwd(p_, cfg, kinds, x_, positions, c_, offset,
+                              mode, moe_groups)
+            return (L.maybe_constrain(out[0], act_spec),) + out[1:]
+
+        if cfg.remat == "full":
+            period_body = jax.checkpoint(period_body)
+        elif cfg.remat == "dots":
+            # save matmul outputs, recompute the cheap elementwise rest:
+            # trades the full-remat fwd replay (~8ND) for extra activation
+            # memory (§Perf lever)
+            period_body = jax.checkpoint(
+                period_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        if cfg.scan_layers:
+            def scan_step(carry, xs):
+                x_, aux_ = carry
+                p_, c_ = xs
+                x_, nc_, aux_i = period_body(x_, p_, c_)
+                aux_ = jax.tree.map(lambda a, b: a + b, aux_, aux_i)
+                return (x_, aux_), nc_
+
+            (x, aux_tot), seg_new_cache = jax.lax.scan(
+                scan_step, (x, aux_tot), (seg_params, seg_cache))
+        else:
+            # unrolled (dry-run cost probes: while bodies are counted once
+            # by HloCostAnalysis, so probes must not hide layers in a scan)
+            caches_r = []
+            for r in range(repeats):
+                p_r = jax.tree.map(lambda a: a[r], seg_params)
+                c_r = (jax.tree.map(lambda a: a[r], seg_cache)
+                       if seg_cache is not None else None)
+                x, nc_r, aux_i = period_body(x, p_r, c_r)
+                aux_tot = jax.tree.map(lambda a, b: a + b, aux_tot, aux_i)
+                caches_r.append(nc_r)
+            seg_new_cache = jax.tree.map(
+                lambda *ls: jnp.stack(ls, 0), *caches_r)
+        new_cache_out.append(seg_new_cache)
+
+    x = L.rmsnorm_fwd(params["final_norm"], x, cfg.rms_norm_eps,
+                      cfg.norm_impl)
+    if skip_head:
+        return x, new_cache_out, aux_tot
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["embedding"].T
+    else:
+        logits = L.dense_fwd(params["lm_head"], x)
+    return logits, new_cache_out, aux_tot
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+
+def cross_entropy(logits, labels, vocab_size):
+    """Mean CE over tokens; logits (B,S,Vpad), labels (B,S) in [0, vocab)."""
+    lf = logits.astype(jnp.float32)
+    # mask padded vocab slots out of the partition function
+    Vpad = lf.shape[-1]
+    if Vpad > vocab_size:
+        neg = jnp.full((Vpad - vocab_size,), -1e30, jnp.float32)
+        lf = jnp.concatenate(
+            [lf[..., :vocab_size],
+             jnp.broadcast_to(neg, lf.shape[:-1] + (Vpad - vocab_size,))],
+            axis=-1)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def cross_entropy_chunked(hidden, head_w, labels, vocab_size,
+                          chunk=512, unroll=False):
+    """Fused head+CE over sequence chunks: the full (B,S,Vpad) f32 logits
+    tensor is never materialized — each chunk's logits are produced,
+    reduced to (logz - gold) and discarded (with recompute on the bwd via
+    jax.checkpoint).  §Perf memory-term lever; numerics identical to
+    cross_entropy (tested).
+
+    hidden: (B,S,D); head_w: (D, Vpad); labels: (B,S).
+    """
+    B, S, D = hidden.shape
+    Vpad = head_w.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    nch = (S + pad) // chunk
+    hc = hidden.reshape(B, nch, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nch, chunk).transpose(1, 0, 2)
+    valid = (jnp.arange(S + pad) < S).reshape(nch, chunk)
+
+    @jax.checkpoint
+    def chunk_ce(xc, yc, vc):
+        logits = (xc @ head_w).astype(jnp.float32)       # (B, chunk, Vpad)
+        if Vpad > vocab_size:
+            col = jnp.arange(Vpad) < vocab_size
+            logits = jnp.where(col, logits, -1e30)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * vc[None, :])
+
+    if unroll:
+        total = jnp.zeros((), jnp.float32)
+        for i in range(nch):
+            total = total + chunk_ce(hc[i], lc[i], valid[i])
+    else:
+        def body(carry, xs):
+            xc, yc, vc = xs
+            return carry + chunk_ce(xc, yc, vc), None
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                (hc, lc, valid))
+    return total / (B * S)
+
+
+def train_loss(params, cfg: ModelConfig, batch, act_spec=None,
+               moe_groups=1):
+    if cfg.ce_impl == "chunked":
+        hidden, _, aux = lm_forward(params, cfg, batch, act_spec=act_spec,
+                                    moe_groups=moe_groups, skip_head=True)
+        head_w = (params["embed"]["embedding"].T if cfg.tie_embeddings
+                  else params["lm_head"]["w"])
+        loss = cross_entropy_chunked(
+            hidden, head_w, batch["labels"], cfg.vocab_size,
+            unroll=(cfg.attn_impl == "chunked_unrolled"))
+    else:
+        logits, _, aux = lm_forward(params, cfg, batch, act_spec=act_spec,
+                                    moe_groups=moe_groups)
+        loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    if cfg.num_experts:
+        loss = loss + 0.01 * aux["load_balance_loss"]
+    return loss, {"ce_loss": loss, **aux}
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, act_spec=None,
+            moe_groups=1):
+    """Run the full prompt, writing into a preallocated decode cache."""
+    logits, new_cache, _ = lm_forward(params, cfg, batch, cache=cache,
+                                      offset=0, mode="prefill",
+                                      act_spec=act_spec,
+                                      moe_groups=moe_groups)
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, batch, cache, offset,
+                act_spec=None):
+    """One token step against an existing cache."""
+    logits, new_cache, _ = lm_forward(params, cfg, batch, cache=cache,
+                                      offset=offset, mode="decode",
+                                      act_spec=act_spec)
+    return logits, new_cache
+
+
+def _batch_size(cfg, batch):
+    return (batch["tokens"].shape[0] if cfg.input_mode == "tokens"
+            else batch["embeds"].shape[0])

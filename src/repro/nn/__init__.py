@@ -1,0 +1,1 @@
+from repro.nn import layers, attention, moe, mamba  # noqa: F401

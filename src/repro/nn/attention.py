@@ -1,0 +1,287 @@
+"""Attention mixers: GQA (qwen/mistral/musicgen) and MLA (deepseek-v2).
+
+Three execution paths, all numerically equivalent (tested):
+  * exact: full (L x L) causal attention — small seqs;
+  * chunked: online-softmax over KV chunks (lax.scan) — bounds memory for
+    32k prefill without a kernel; same math as flash attention;
+  * decode: one query token against a cached KV (+latent for MLA).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+
+CHUNKED_THRESHOLD = 2048   # switch to online-softmax attention above this
+KV_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# GQA
+
+def gqa_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.q_dim, bias=cfg.qkv_bias),
+        "wk": L.dense_init(ks[1], cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias),
+        "wv": L.dense_init(ks[2], cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias),
+        "wo": L.dense_init(ks[3], cfg.q_dim, cfg.d_model),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(cfg.head_dim)
+        p["k_norm"] = L.rmsnorm_init(cfg.head_dim)
+    return p
+
+
+def _shard_heads(cfg, t):
+    """Pin (B, S, H, head_dim) sharding: hd over 'model' (always divides:
+    head_dim 128 % 16 == 0) — rescues archs whose head COUNT does not
+    divide the TP degree (qwen3: 40 heads / 16 devices) from SPMD
+    resharding storms.  Requires an active mesh context (dry-run/launch);
+    no-op otherwise (cfg.shard_heads == 'none', the default)."""
+    if cfg.shard_heads != "head_dim":
+        return t
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        t, P(None, None, None, "model"))
+
+
+def _qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    q = L.dense_fwd(p["wq"], x).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = L.dense_fwd(p["wk"], x).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = L.dense_fwd(p["wv"], x).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rmsnorm_fwd(p["q_norm"], q, cfg.rms_norm_eps, cfg.norm_impl)
+        k = L.rmsnorm_fwd(p["k_norm"], k, cfg.rms_norm_eps, cfg.norm_impl)
+    q = L.apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections,
+                     cfg.rope_impl)
+    k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections,
+                     cfg.rope_impl)
+    q, k, v = _shard_heads(cfg, q), _shard_heads(cfg, k), _shard_heads(cfg, v)
+    return q, k, v
+
+
+def _repeat_kv(k, num_heads):
+    """(B, S, KVH, D) -> (B, S, H, D) by head-group broadcast."""
+    B, S, KVH, D = k.shape
+    rep = num_heads // KVH
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KVH, rep, D)).reshape(
+        B, S, num_heads, D)
+
+
+def exact_attention(q, k, v, causal=True, q_offset=0):
+    """q: (B,Sq,H,D); k,v: (B,Sk,H,D). f32 softmax accumulation."""
+    D = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        qi = jnp.arange(Sq)[:, None] + q_offset
+        ki = jnp.arange(Sk)[None, :]
+        scores = jnp.where(qi >= ki, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def chunked_attention(q, k, v, causal=True, chunk=KV_CHUNK, unroll=False,
+                      score_dtype=jnp.float32):
+    """Online-softmax attention over KV chunks: O(Sq * chunk) live memory.
+
+    Mathematically identical to exact_attention (flash-attention recurrence);
+    this is the pure-XLA twin of kernels/flash_attention.py.
+    unroll=True replaces the lax.scan with a Python loop (used by the
+    dry-run cost probes: XLA's HloCostAnalysis counts while bodies once).
+    score_dtype=bf16 keeps the (Sq x chunk) score/prob tensors in bf16 at
+    HBM boundaries (the exp/max arithmetic stays f32 inside fusions) —
+    §Perf memory lever; running max/denominator/accumulator remain f32.
+    """
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    Sk = k.shape[1]
+    nchunks = (Sk + chunk - 1) // chunk
+    pad = nchunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, chunk, H, Dv).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qi = jnp.arange(Sq)[:, None]
+    NEG = jnp.finfo(score_dtype).min / 2
+
+    def step(carry, xs):
+        m, l, acc, ci = carry[0], carry[1], carry[2], carry[3]
+        kb, vb = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                       preferred_element_type=score_dtype)
+        s = (s * scale.astype(score_dtype)).astype(score_dtype)
+        ki = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = ki < Sk
+        if causal:
+            mask = mask & (qi >= ki)
+        s = jnp.where(mask[None, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+        # guard all-masked rows (m_new = NEG): contribute nothing
+        m_safe = jnp.where(m_new > NEG / 2, m_new, 0.0)
+        p = jnp.exp(s.astype(jnp.float32) - m_safe[..., None]).astype(
+            score_dtype)
+        p = jnp.where(mask[None, None], p, 0)
+        corr = jnp.where(m > NEG / 2, jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.astype(jnp.float32).sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc_new, ci + 1), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0, jnp.int32(0))
+        for ci in range(nchunks):
+            carry, _ = step(carry, (kc[ci], vc[ci]))
+        m, l, acc = carry[0], carry[1], carry[2]
+    else:
+        (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)),
+                                         (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B, Sq, H, D)
+
+
+def gqa_fwd(p, cfg, x, positions, cache=None, offset=0, mode="train"):
+    """Returns (out, new_cache).
+
+    mode: "train" (no cache), "prefill" (attend within batch, write cache
+    buffer at ``offset``), "decode" (attend against the cache).
+    cache: (k_buf, v_buf) of shape (B, Lmax, KVH, D) for prefill/decode.
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if mode in ("train", "prefill"):
+        kf = _repeat_kv(k, cfg.num_heads)
+        vf = _repeat_kv(v, cfg.num_heads)
+        if S > CHUNKED_THRESHOLD and cfg.attn_impl != "exact":
+            out = chunked_attention(
+                q, kf, vf, unroll=(cfg.attn_impl == "chunked_unrolled"),
+                score_dtype=(jnp.bfloat16 if cfg.attn_score_dtype == "bf16"
+                             else jnp.float32))
+        else:
+            out = exact_attention(q, kf, vf)
+        if mode == "prefill":
+            ck, cv = cache
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), offset, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), offset, 1)
+            new_cache = (ck, cv)
+        else:
+            new_cache = None
+    else:
+        ck, cv = cache                             # (B, Lmax, KVH, D) x2
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), offset, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), offset, 1)
+        kf = _repeat_kv(ck, cfg.num_heads)
+        vf = _repeat_kv(cv, cfg.num_heads)
+        Lmax = ck.shape[1]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32)
+        scores = scores / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+        ki = jnp.arange(Lmax)[None, :]
+        qi = offset + jnp.arange(S)[:, None]
+        scores = jnp.where((ki <= qi)[None, None], scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+        new_cache = (ck, cv)
+    out = out.reshape(B, S, cfg.q_dim)
+    return L.dense_fwd(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent-compressed KV.
+
+def mla_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.num_heads * qk_dim),
+        "w_dkv": L.dense_init(ks[1], cfg.d_model,
+                              cfg.kv_lora_rank + cfg.qk_rope_dim),
+        "kv_norm": L.rmsnorm_init(cfg.kv_lora_rank),
+        "w_ukv": L.dense_init(
+            ks[2], cfg.kv_lora_rank,
+            cfg.num_heads * (cfg.qk_nope_dim + cfg.v_head_dim)),
+        "wo": L.dense_init(ks[3], cfg.num_heads * cfg.v_head_dim, cfg.d_model),
+    }
+
+
+def _mla_qkv(p, cfg, x, positions, latent):
+    """latent: (B, S_total, lora+rope) compressed cache (or None)."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    q = L.dense_fwd(p["wq"], x).reshape(B, S, H, qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta,
+                          impl=cfg.rope_impl)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    ckv = L.dense_fwd(p["w_dkv"], x)                       # (B,S,lora+rope)
+    c_kv, k_rope = jnp.split(ckv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = L.rmsnorm_fwd(p["kv_norm"], c_kv, cfg.rms_norm_eps,
+                         cfg.norm_impl)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions,
+                          cfg.rope_theta, impl=cfg.rope_impl)
+    new_latent = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+    return q, new_latent
+
+
+def _mla_expand(p, cfg, latent):
+    """Expand latent cache -> per-head K (nope+rope) and V."""
+    B, S, _ = latent.shape
+    H = cfg.num_heads
+    c_kv, k_rope = jnp.split(latent, [cfg.kv_lora_rank], axis=-1)
+    kv = L.dense_fwd(p["w_ukv"], c_kv).reshape(
+        B, S, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    k_rope = jnp.broadcast_to(k_rope[:, :, None, :],
+                              (B, S, H, cfg.qk_rope_dim))
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return k, v
+
+
+def mla_fwd(p, cfg, x, positions, cache=None, offset=0, mode="train"):
+    B, S, _ = x.shape
+    q, latent = _mla_qkv(p, cfg, x, positions, None)
+    if mode in ("train", "prefill"):
+        k, v = _mla_expand(p, cfg, latent)
+        if S > CHUNKED_THRESHOLD and cfg.attn_impl != "exact":
+            out = chunked_attention(
+                q, k, v, unroll=(cfg.attn_impl == "chunked_unrolled"),
+                score_dtype=(jnp.bfloat16 if cfg.attn_score_dtype == "bf16"
+                             else jnp.float32))
+        else:
+            out = exact_attention(q, k, v)
+        if mode == "prefill":
+            new_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache, latent.astype(cache.dtype), offset, 1)
+        else:
+            new_cache = None
+    else:
+        clat = cache                                       # (B, Lmax, lora+rope)
+        clat = jax.lax.dynamic_update_slice_in_dim(
+            clat, latent.astype(clat.dtype), offset, 1)
+        k, v = _mla_expand(p, cfg, clat)
+        Lmax = clat.shape[1]
+        scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        ki = jnp.arange(Lmax)[None, :]
+        qi = offset + jnp.arange(S)[:, None]
+        scores = jnp.where((ki <= qi)[None, None], scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+        new_cache = clat
+    out = out.reshape(B, S, cfg.num_heads * cfg.v_head_dim)
+    return L.dense_fwd(p["wo"], out), new_cache

@@ -1,0 +1,125 @@
+"""Core layers: functional init/apply, params as plain dict pytrees.
+
+Convention: ``init_*`` returns a dict of arrays; ``*_fwd`` consumes it.
+Sharding metadata is derived from param *paths* in repro.dist.sharding,
+so layers stay framework-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+def maybe_constrain(x, spec):
+    """with_sharding_constraint when a PartitionSpec is given, else no-op.
+
+    Used to pin (batch, seq, d_model) activations at layer boundaries so
+    SPMD propagation cannot trade the batch sharding away (it otherwise
+    happily replicates batch and feature-shards activations to match the
+    FSDP weight layout — observed in the first dry-run iteration).
+    """
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def dense_init(key, d_in, d_out, dtype=DEFAULT_DTYPE, bias=False, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_fwd(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_fwd(p, x, eps=1e-5, impl="f32"):
+    if impl == "stat_f32":
+        # f32 only for the variance reduction; the normalize multiply and
+        # scale stay in x.dtype — removes two (B,S,D)-sized f32
+        # materializations per call (§Perf memory lever)
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * p["scale"].astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def embed_init(key, vocab, d, dtype=DEFAULT_DTYPE):
+    w = (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return {"embedding": w}
+
+
+def embed_fwd(p, ids):
+    return jnp.take(p["embedding"], ids, axis=0)
+
+
+def mlp_init(key, d, d_ff, dtype=DEFAULT_DTYPE):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d, d_ff, dtype),
+        "wg": dense_init(k2, d, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp_fwd(p, x):
+    """SwiGLU MLP (gate * silu(up))."""
+    h = jax.nn.silu(dense_fwd(p["wi"], x)) * dense_fwd(p["wg"], x)
+    return dense_fwd(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta=1e6, sections=(), impl="f32"):
+    """x: (..., L, H, D). positions: (B, L) or (3, B, L) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the head_dim/2 frequency slots are split into
+    ``sections`` (t, h, w); each section takes its angle from the matching
+    row of the 3-axis position ids.
+    impl="bf16": rotate in x.dtype (angles still f32) — avoids promoting
+    the whole (B, L, H, D) tensor to f32 (§Perf memory lever).
+    """
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)      # (d/2,)
+    if positions.ndim == 3 and sections:
+        # build per-slot positions from the (3, B, L) grid
+        sec_id = np.concatenate([np.full((s,), i) for i, s in enumerate(sections)])
+        pos = positions[sec_id]                                  # (d/2, B, L)
+        ang = jnp.einsum("sbl,s->bls", pos.astype(jnp.float32), freqs)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs   # (B, L, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if impl == "bf16":
+        cos, sin = cos.astype(x.dtype), sin.astype(x.dtype)
+    cos = cos[..., None, :]                                      # (B, L, 1, d/2)
+    sin = sin[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def make_positions(batch, seq, offset=0):
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + offset + jnp.zeros(
+        (batch, 1), jnp.int32)

@@ -1,0 +1,235 @@
+"""Mamba2 block (state-space duality / SSD), chunked, pure JAX.
+
+Follows the minimal SSD formulation of Dao & Gu 2024 (arXiv:2405.21060):
+within chunks the recurrence is computed as masked matmuls (the "dual"
+quadratic form, MXU-friendly); across chunks a linear scan carries the
+(heads, head_dim, state) SSM state.
+
+TP note: the input projections are stored as *separate* z/x/B/C/dt
+matrices (not one fused in_proj) and the depthwise conv as per-stream
+weights, so every tensor-parallel shard boundary falls on a whole
+logical stream — no resharding collectives inside the block.  The
+depthwise causal conv1d uses the cuConv tap decomposition
+(repro.kernels.conv1d_tap) — the paper's technique applied to the 1D
+conv inside SSM blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+
+CHUNK = 256
+
+
+def mamba_init(key, cfg):
+    ks = jax.random.split(key, 9)
+    D = cfg.d_model
+    d_in, H, N, G = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    GN = G * N
+
+    def conv_w(k, dim):
+        return (jax.random.normal(k, (cfg.d_conv, dim), jnp.float32)
+                * 0.2).astype(L.DEFAULT_DTYPE)
+
+    return {
+        "wz": L.dense_init(ks[0], D, d_in),
+        "wx": L.dense_init(ks[1], D, d_in),
+        "wB": L.dense_init(ks[2], D, GN),
+        "wC": L.dense_init(ks[3], D, GN),
+        "wdt": L.dense_init(ks[4], D, H),
+        "conv_x": {"w": conv_w(ks[5], d_in), "b": jnp.zeros((d_in,),
+                                                            L.DEFAULT_DTYPE)},
+        "conv_B": {"w": conv_w(ks[6], GN), "b": jnp.zeros((GN,),
+                                                          L.DEFAULT_DTYPE)},
+        "conv_C": {"w": conv_w(ks[7], GN), "b": jnp.zeros((GN,),
+                                                          L.DEFAULT_DTYPE)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": L.rmsnorm_init(d_in),
+        "out_proj": L.dense_init(ks[8], d_in, D),
+    }
+
+
+def causal_conv1d(x, w, b):
+    """Tap-decomposed depthwise causal conv1d (pure-JAX cuConv analogue).
+
+    x: (B, L, C); w: (K, C).  y[l] = sum_k w[k] * x[l - K + 1 + k].
+    The K shifted views are XLA slices of one padded buffer — the same
+    no-materialized-transform structure as kernels/conv1d_tap.py.
+    """
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    Lx = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):                        # K taps (K=4): unrolled adds
+        y = y + xp[:, k:k + Lx, :].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv_decode(window, w, b):
+    """window: (B, K, C) raw stream values; returns conv output at last pos."""
+    out = (window.astype(jnp.float32) * w.astype(jnp.float32)[None]).sum(1)
+    return out + b.astype(jnp.float32)
+
+
+def _segsum(dA):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} dA[..., k]."""
+    T = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk=CHUNK, init_state=None):
+    """SSD over chunks, **group-aware**: B/C keep their (g, n) group shape
+    inside every einsum instead of being jnp.repeat-ed h-fold up front
+    (the repeat materialized two (b, l, h, n) f32 tensors per block — for
+    mamba2-1.3b that was 2 x 1.07 GB/layer of pure HBM traffic; §Perf).
+
+    x: (b, l, h, p)  dt: (b, l, h)  A: (h,)  B, C: (b, l, g, n)
+    Returns y: (b, l, h, p), final_state: (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
+    nc = l // chunk
+    rep = h // g
+
+    xr = x.reshape(b, nc, chunk, g, rep, p)
+    dtr = dt.reshape(b, nc, chunk, g, rep)
+    Bg = B.reshape(b, nc, chunk, g, n)
+    Cg = C.reshape(b, nc, chunk, g, n)
+
+    dA = dtr * A.reshape(g, rep)[None, None, None]   # (b,nc,T,g,rep)
+    dA = dA.transpose(0, 1, 3, 4, 2)                 # (b,nc,g,rep,T)
+    dA_cum = jnp.cumsum(dA, axis=-1)
+
+    # 1) diagonal (intra-chunk) term; scores are per-GROUP (h-free)
+    Ldec = jnp.exp(_segsum(dA))                      # (b,nc,g,rep,T,T)
+    scores = jnp.einsum("bctgn,bcsgn->bcgts", Cg, Bg).astype(jnp.float32)
+    gated = scores[:, :, :, None] * Ldec             # (b,nc,g,rep,T,T)
+    xw = (xr * dtr[..., None]).astype(jnp.float32)   # dt-weighted input
+    y_diag = jnp.einsum("bcgrts,bcsgrp->bctgrp", gated, xw)
+
+    # 2) chunk-final states
+    decay_to_end = jnp.exp(dA_cum[..., -1:] - dA_cum)        # (b,nc,g,rep,T)
+    states = jnp.einsum("bctgn,bcgrt,bctgrp->bcgrpn",
+                        Bg.astype(jnp.float32), decay_to_end, xw)
+
+    # 3) inter-chunk recurrence (linear scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[..., -1])                    # (b,nc,g,rep)
+    s0 = (jnp.zeros((b, g, rep, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32).reshape(b, g, rep, p, n))
+
+    def step(carry, xs):
+        st, dec = xs                                  # (b,g,rep,p,n),(b,g,rep)
+        new = carry * dec[..., None, None] + st
+        return new, carry                             # emit prev state
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4, 5),
+                   chunk_decay.transpose(1, 0, 2, 3)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)  # (b,nc,g,rep,p,n)
+
+    # 4) off-diagonal contribution from carried state
+    state_decay = jnp.exp(dA_cum)                          # (b,nc,g,rep,T)
+    y_off = jnp.einsum("bctgn,bcgrt,bcgrpn->bctgrp",
+                       Cg.astype(jnp.float32), state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final.reshape(b, h, p, n)
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """Single-token recurrence.  state: (b,h,p,n); x: (b,h,p); B,C: (b,g,n)."""
+    b, h, p = x.shape
+    g = B.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)           # (b,h,n)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt * A[None, :])                                 # (b,h)
+    upd = jnp.einsum("bhp,bhn->bhpn", (x * dt[..., None]).astype(jnp.float32), Bh)
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y, new_state
+
+
+def mamba_fwd(p, cfg, u, cache=None, mode="train"):
+    """u: (B, S, D).
+
+    cache (prefill/decode): ((tail_x, tail_B, tail_C), ssm_state) with
+    tails (B, d_conv-1, dim) holding raw pre-conv stream values.
+    """
+    Bsz, S, _ = u.shape
+    d_in, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    z = L.dense_fwd(p["wz"], u)
+    x_raw = L.dense_fwd(p["wx"], u)
+    B_raw = L.dense_fwd(p["wB"], u)
+    C_raw = L.dense_fwd(p["wC"], u)
+    dt_raw = L.dense_fwd(p["wdt"], u)
+
+    if mode in ("train", "prefill"):
+        x = jax.nn.silu(causal_conv1d(x_raw, p["conv_x"]["w"], p["conv_x"]["b"]))
+        Bc = jax.nn.silu(causal_conv1d(B_raw, p["conv_B"]["w"], p["conv_B"]["b"]))
+        Cc = jax.nn.silu(causal_conv1d(C_raw, p["conv_C"]["w"], p["conv_C"]["b"]))
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        chunk = min(cfg.ssm_chunk or CHUNK, max(16, S))
+        pad = (-S) % chunk
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+            Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        y, final_state = ssd_chunked(
+            x.reshape(Bsz, -1, H, P), dt, A,
+            Bc.reshape(Bsz, -1, G, N), Cc.reshape(Bsz, -1, G, N),
+            chunk=chunk)
+        y = y.reshape(Bsz, -1, d_in)[:, :S]
+        y = y + x[:, :S].astype(jnp.float32) * jnp.repeat(p["D"], P)[None, None, :]
+        if mode == "prefill":
+            K1 = cfg.d_conv - 1
+
+            def tail(stream, buf):
+                t = stream[:, max(0, S - K1):, :]
+                if S < K1:
+                    t = jnp.pad(t, ((0, 0), (K1 - S, 0), (0, 0)))
+                return t.astype(buf.dtype)
+
+            (bx, bB, bC), bs = cache
+            new_cache = ((tail(x_raw, bx), tail(B_raw, bB), tail(C_raw, bC)),
+                         final_state.astype(bs.dtype))
+        else:
+            new_cache = None
+    else:
+        (tx, tB, tC), ssm_state = cache           # tails: (B, K-1, dim)
+        win = lambda t, raw: jnp.concatenate(
+            [t.astype(raw.dtype), raw[:, :1]], axis=1)
+        x = jax.nn.silu(_conv_decode(win(tx, x_raw), p["conv_x"]["w"],
+                                     p["conv_x"]["b"])).astype(u.dtype)
+        Bc = jax.nn.silu(_conv_decode(win(tB, B_raw), p["conv_B"]["w"],
+                                      p["conv_B"]["b"])).astype(u.dtype)
+        Cc = jax.nn.silu(_conv_decode(win(tC, C_raw), p["conv_C"]["w"],
+                                      p["conv_C"]["b"])).astype(u.dtype)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        y, new_ssm = ssd_decode_step(
+            ssm_state.astype(jnp.float32), x.reshape(Bsz, H, P), dt, A,
+            Bc.reshape(Bsz, G, N), Cc.reshape(Bsz, G, N))
+        y = y.reshape(Bsz, 1, d_in)
+        y = y + x.reshape(Bsz, 1, d_in).astype(jnp.float32) \
+            * jnp.repeat(p["D"], P)[None, None, :]
+        new_tails = tuple(
+            jnp.concatenate([t.astype(raw.dtype), raw[:, :1]], axis=1)[:, 1:]
+            .astype(t.dtype)
+            for t, raw in ((tx, x_raw), (tB, B_raw), (tC, C_raw)))
+        new_cache = (new_tails, new_ssm.astype(ssm_state.dtype))
+
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    y = L.rmsnorm_fwd(p["norm"], y, cfg.rms_norm_eps, cfg.norm_impl)
+    return L.dense_fwd(p["out_proj"], y), new_cache

@@ -1,0 +1,66 @@
+"""AdamW in pure JAX with f32 master weights (mixed-precision training).
+
+Model params live in bf16; the optimizer carries f32 master weights plus
+f32 first/second moments (12 bytes/param), all sharded with the same
+PartitionSpecs as the corresponding parameter (ZeRO-style: FSDP axis x TP
+axis -> full 2D sharding of optimizer state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    # copy=True: an f32 param leaf's .astype(f32) would alias the SAME
+    # buffer, and donating params+opt together then aborts with
+    # "donate the same buffer twice"
+    f32 = lambda t: jax.tree.map(
+        lambda a: jnp.array(a, dtype=jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), t)
+    return {"master": f32(params), "m": zeros(params), "v": zeros(params)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(a.astype(jnp.float32)))
+                        for a in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt, step, lr, *, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    """Returns (new_params, new_opt, metrics).  step is 0-based."""
+    gnorm = global_norm(grads)
+    scale = jnp.where(grad_clip > 0,
+                      jnp.minimum(1.0, grad_clip / (gnorm + 1e-9)), 1.0)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, mw, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        step_vec = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay on non-1D params (norms/biases excluded)
+        if mw.ndim > 1:
+            step_vec = step_vec + weight_decay * mw
+        mw = mw - lr * step_vec
+        return mw.astype(p.dtype), mw, m, v
+
+    out = jax.tree.map(upd, params, grads, opt["master"], opt["m"], opt["v"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda o: isinstance(o, tuple))
+    new_opt = {
+        "master": jax.tree.map(lambda o: o[1], out,
+                               is_leaf=lambda o: isinstance(o, tuple)),
+        "m": jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda o: isinstance(o, tuple)),
+        "v": jax.tree.map(lambda o: o[3], out,
+                          is_leaf=lambda o: isinstance(o, tuple)),
+    }
+    return new_params, new_opt, {"grad_norm": gnorm}

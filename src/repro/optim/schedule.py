@@ -1,0 +1,14 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr=3e-4, warmup_steps=100,
+                    total_steps=10_000, min_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+    prog = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                    0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)

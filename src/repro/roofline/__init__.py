@@ -1,0 +1,1 @@
+from repro.roofline.analysis import analyze_all, HW  # noqa: F401

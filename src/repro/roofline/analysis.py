@@ -1,0 +1,121 @@
+"""Three-term roofline from the dry-run artifacts (TPU v5e constants).
+
+  compute term    = HLO_FLOPs / (peak bf16 FLOP/s)         [per chip]
+  memory term     = HLO_bytes / HBM bandwidth              [per chip]
+  collective term = collective_bytes / ICI link bandwidth  [per chip]
+
+HLO_FLOPs / bytes / collective bytes are the probe-extrapolated totals
+(see launch/dryrun.py: XLA cost analysis counts while bodies once, so
+unrolled 1/2-period probes are extrapolated linearly — exact).
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (inference)
+— the "useful" compute; its ratio to HLO flops exposes remat/redundancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "TPU v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # B/s per chip
+    ici_bw: float = 50e9                # B/s per link
+
+
+HW = Hardware()
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "OK":
+        return None
+    probe = rec.get("probe", {})
+    flops = probe.get("flops_total_per_device")
+    byts = probe.get("bytes_total_per_device")
+    coll = probe.get("collective_bytes_total_per_device")
+    if flops is None:
+        flops = rec.get("flops_per_device")
+        byts = rec.get("bytes_accessed_per_device")
+        coll = rec.get("collective_bytes_per_device")
+    t_c = flops / HW.peak_flops
+    t_m = byts / HW.hbm_bw
+    t_x = coll / HW.ici_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    mult = 6 if rec["kind"] == "train" else 2
+    model_flops = mult * rec["active_params"] * rec["tokens"]
+    hlo_global = flops * rec["devices"]
+    bound_time = max(terms.values())
+    # roofline fraction: useful model flops over the time the dominant
+    # term pins the step at, vs the chip's peak
+    frac = (model_flops / rec["devices"] / bound_time) / HW.peak_flops
+    levers = {
+        "compute": ("reduce recompute (remat policy) or cast accumulations "
+                    "to bf16 where safe"),
+        "memory": ("fuse/eliminate f32 round-trips (chunked CE loss, bf16 "
+                   "intermediates) and shrink materialized buffers"),
+        "collective": ("swap all-reduce for reduce-scatter+all-gather "
+                       "(sequence-sharded residuals) and bf16 collectives"),
+    }
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom, "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": model_flops / hlo_global if hlo_global else 0.0,
+        "roofline_frac": frac,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+        "lever": levers[dom],
+    }
+
+
+def analyze_all(art_dir="artifacts/dryrun") -> List[Dict]:
+    out = []
+    for f in sorted(Path(art_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        row = analyze_record(rec)
+        if row is None:
+            row = {"arch": rec["arch"], "shape": rec["shape"],
+                   "mesh": rec["mesh"], "status": rec["status"]}
+        else:
+            row["status"] = "OK"
+        row["variant"] = rec.get("variant", "")
+        out.append(row)
+    return out
+
+
+def to_markdown(rows: List[Dict], mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | bound | "
+           "6ND/HLO | roofline frac | peak GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.get("mesh") != mesh or r.get("variant"):
+            continue
+        if r["status"] != "OK":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['peak_gib']:.1f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = analyze_all(args.art)
+    print(to_markdown(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

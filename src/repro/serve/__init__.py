@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeEngine, Request  # noqa: F401

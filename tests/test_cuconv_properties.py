@@ -1,0 +1,146 @@
+"""Property-based tests (hypothesis) for the cuConv algorithm family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import cuconv as cc
+from repro.kernels import ref
+
+conv_shapes = st.tuples(
+    st.integers(1, 3),                 # N
+    st.integers(3, 14),                # H (=W)
+    st.sampled_from([1, 3, 5]),        # K
+    st.integers(1, 24),                # C
+    st.integers(1, 16),                # M
+    st.integers(1, 2),                 # stride
+)
+
+
+def _mk(shape_tuple, seed=0):
+    N, H, K, C, M, s = shape_tuple
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(N, H, H, C)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, C, M)), jnp.float32)
+    return x, w, s
+
+
+@settings(max_examples=40, deadline=None)
+@given(conv_shapes, st.integers(0, 2**31 - 1))
+def test_all_algorithms_agree(shape_tuple, seed):
+    """Every cuConv variant equals the library convolution (same padding)."""
+    x, w, s = _mk(shape_tuple, seed)
+    if s > 1 and x.shape[1] < w.shape[0]:
+        s = 1
+    want = cc.conv_lax(x, w, s, "same")
+    for name in ["im2col", "cuconv_two_stage", "cuconv"]:
+        got = cc.ALGORITHMS[name](x, w, s, "same")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-4, atol=3e-4, err_msg=name)
+
+
+@settings(max_examples=20, deadline=None)
+@given(conv_shapes, st.integers(0, 2**31 - 1))
+def test_stage_decomposition_property(shape_tuple, seed):
+    """The paper's core identity: conv == sum over taps of shifted 1x1
+    channel contractions (stage2(stage1(x)) == conv), for any K."""
+    x, w, _ = _mk(shape_tuple, seed)
+    assume(x.shape[1] >= w.shape[0])       # valid padding needs H >= K
+    temps = cc.cuconv_stage1(x, w, 1, "valid")
+    K2 = w.shape[0] * w.shape[1]
+    assert temps.shape[0] == K2, "one temporary matrix per filter tap"
+    got = cc.cuconv_stage2(temps)
+    want = cc.conv_lax(x, w, 1, "valid")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 10), st.integers(1, 16),
+       st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_1x1_is_single_gemm(N, H, C, M, seed):
+    """1x1 filters: stage-1 output IS the convolution (paper's fast path)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(N, H, H, C)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(1, 1, C, M)), jnp.float32)
+    temps = cc.cuconv_stage1(x, w, 1, "valid")
+    assert temps.shape[0] == 1
+    want = cc.conv_lax(x, w, 1, "valid")
+    np.testing.assert_allclose(np.asarray(temps[0]), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 2), st.integers(4, 10), st.sampled_from([3, 5]),
+       st.integers(1, 12), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_linearity_in_filters(N, H, K, C, M, seed):
+    """Convolution is linear in w: conv(x, a*w1 + w2) == a*conv(x,w1)+conv(x,w2)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(N, H, H, C)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(K, K, C, M)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(K, K, C, M)), jnp.float32)
+    a = 1.7
+    lhs = cc.conv_cuconv(x, a * w1 + w2, 1, "same")
+    rhs = a * cc.conv_cuconv(x, w1, 1, "same") + cc.conv_cuconv(
+        x, w2, 1, "same")
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_autotune_heuristic_regions():
+    from repro.core.autotune import select_algorithm
+    # 1x1: always cuConv (the paper's winning region)
+    assert select_algorithm((1, 7, 7, 832), (1, 1, 832, 256)) == "cuconv"
+    # batch-1 small spatial: cuConv
+    assert select_algorithm((1, 7, 7, 192), (3, 3, 192, 384)) == "cuconv"
+    # large 3x3: Winograd's region in the paper
+    assert select_algorithm((64, 56, 56, 128), (3, 3, 128, 128)) == "winograd"
+    # stride != 1 -> library
+    assert select_algorithm((1, 7, 7, 64), (3, 3, 64, 64), stride=2) == "lax"
+
+
+def test_measured_autotune_runs(rng):
+    from repro.core.autotune import measure_algorithm
+    x = jnp.asarray(rng.normal(size=(1, 7, 7, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(1, 1, 32, 16)), jnp.float32)
+    best = measure_algorithm(x, w, repeats=1)
+    assert best in cc.ALGORITHMS
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 3), st.integers(3, 14), st.integers(1, 16),
+       st.integers(1, 12), st.sampled_from(["same", "valid"]),
+       st.integers(0, 2**31 - 1))
+def test_winograd_equals_direct(N, H, C, M, pad, seed):
+    """The Winograd baseline (the paper's main competitor) == library conv."""
+    from repro.core.winograd import conv_winograd
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(N, H, H, C)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, C, M)), jnp.float32)
+    got = conv_winograd(x, w, 1, pad)
+    want = cc.conv_lax(x, w, 1, pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_winograd_filter_transform_identity():
+    """A delta filter transforms to a tensor whose A^T m A collapses back
+    to the identity convolution (sanity of the transform matrices)."""
+    from repro.core.winograd import conv_winograd
+    w = jnp.zeros((3, 3, 1, 1)).at[1, 1, 0, 0].set(1.0)   # center tap
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 8, 8, 1)),
+                    jnp.float32)
+    got = conv_winograd(x, w, 1, "same")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_winograd_fallback_non3x3():
+    from repro.core.cuconv import ALGORITHMS
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 7, 7, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(5, 5, 4, 3)), jnp.float32)
+    got = ALGORITHMS["winograd"](x, w, 1, "same")
+    want = cc.conv_lax(x, w, 1, "same")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,72 @@
+"""Dry-run machinery unit tests (no 512-device compiles here)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.launch.dryrun import (apply_overrides, cell_defined,
+                                 collective_bytes, probe_variant)
+from repro.launch.steps import input_specs
+from repro.models.lm import stack_plan
+
+
+def test_apply_overrides_types():
+    cfg = get_config("qwen2-1.5b")
+    out = apply_overrides(cfg, ["ce_impl=chunked", "grad_accum=8",
+                                "capacity_factor=2.0", "scan_layers=false"])
+    assert out.ce_impl == "chunked" and out.grad_accum == 8
+    assert out.capacity_factor == 2.0 and out.scan_layers is False
+
+
+def test_probe_variant_periods():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        pc1, period = probe_variant(cfg, 1)
+        pc2, _ = probe_variant(cfg, 2)
+        assert pc1.num_layers == period and pc2.num_layers == 2 * period
+        assert not pc1.scan_layers and pc1.grad_accum == 1
+        # probe stacks must build (stack_plan accepts them)
+        stack_plan(pc1), stack_plan(pc2)
+        if arch == "jamba-v0.1-52b":
+            assert period == 8          # lcm(pattern=8, moe_every=2)
+
+
+def test_long_500k_skip_policy():
+    runs = [a for a in list_archs() if cell_defined(get_config(a),
+                                                    "long_500k")]
+    assert sorted(runs) == ["jamba-v0.1-52b", "mamba2-1.3b"]
+
+
+def test_input_specs_shapes():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            spec = input_specs(cfg, shape)
+            B = shape.global_batch
+            S = shape.seq_len if shape.kind != "decode" else 1
+            if cfg.input_mode == "tokens":
+                assert spec["tokens"].shape == (B, S)
+            else:
+                assert spec["embeds"].shape == (B, S, cfg.d_model)
+            if cfg.mrope_sections:
+                assert spec["positions"].shape == (3, B, S)
+            assert ("labels" in spec) == (shape.kind == "train")
+
+
+def test_collective_parser_ignores_done_and_operands():
+    hlo = """
+  %all-gather-start.1 = f32[8,8]{1,0} all-gather-start(%x), dims={0}
+  %all-gather-done.1 = f32[8,8]{1,0} all-gather-done(%all-gather-start.1)
+  %fusion = f32[2,2]{1,0} fusion(%all-reduce.5), calls=%c
+"""
+    out = collective_bytes(hlo)
+    assert out.get("all-gather", {}).get("count") == 1
+    assert "all-reduce" not in out          # operand mention only
+
+
+def test_padded_vocab_divisibility():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab % 16 == 0   # TP over vocab on 16-wide axis

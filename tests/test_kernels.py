@@ -1,0 +1,134 @@
+"""Per-kernel allclose sweeps vs the ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import conv1x1 as k1, cuconv_stage1 as ks1, \
+    cuconv_stage2 as ks2, cuconv_fused as kf, conv1d_tap as kc, \
+    flash_attention as kfa
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("P,C,M", [(64, 32, 16), (300, 130, 70),
+                                   (17, 257, 129), (1024, 64, 256)])
+def test_conv1x1_gemm(rng, P, C, M, dtype):
+    x = _rand(rng, (P, C), dtype)
+    w = _rand(rng, (C, M), dtype)
+    got = k1.conv1x1_gemm(x, w, interpret=True)
+    want = ref.conv1x1_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,P,C,M", [(9, 50, 16, 8), (25, 128, 48, 32),
+                                     (4, 33, 7, 5)])
+def test_stage1(rng, T, P, C, M, dtype):
+    xs = _rand(rng, (T, P, C), dtype)
+    w = _rand(rng, (T, C, M), dtype)
+    got = ks1.stage1_tap_gemm(xs, w, interpret=True)
+    want = ref.stage1_ref(xs, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOLS[dtype])
+
+
+@pytest.mark.parametrize("T,P,M", [(9, 64, 32), (25, 100, 20), (1, 7, 3)])
+def test_stage2(rng, T, P, M):
+    temps = _rand(rng, (T, P, M), jnp.float32)
+    got = ks2.stage2_tap_sum(temps, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.stage2_ref(
+        temps)), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,H,W,C,KH,KW,M,pad", [
+    (1, 7, 7, 16, 3, 3, 8, 1),
+    (2, 9, 11, 4, 5, 5, 6, 2),
+    (1, 13, 13, 32, 3, 3, 16, 1),
+    (2, 8, 8, 8, 1, 1, 12, 0),
+    (1, 6, 6, 3, 3, 3, 5, 0),
+])
+def test_cuconv_fused_kernel(rng, N, H, W, C, KH, KW, M, pad, dtype):
+    x = _rand(rng, (N, H, W, C), dtype)
+    w = _rand(rng, (KH, KW, C, M), dtype)
+    got = ops.cuconv_fused(x, w, (pad, pad), interpret=True)
+    want = ref.conv2d_pad_ref(x.astype(jnp.float32), w.astype(jnp.float32),
+                              (pad, pad))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("N,H,W,C,KH,KW,M,pad", [
+    (1, 7, 7, 16, 3, 3, 8, 1),
+    (2, 9, 9, 8, 5, 5, 4, 2),
+])
+def test_cuconv_two_stage_kernels(rng, N, H, W, C, KH, KW, M, pad):
+    x = _rand(rng, (N, H, W, C), jnp.float32)
+    w = _rand(rng, (KH, KW, C, M), jnp.float32)
+    got = ops.cuconv_two_stage(x, w, (pad, pad), interpret=True)
+    want = ref.conv2d_pad_ref(x, w, (pad, pad))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,L,D,K", [(2, 37, 24, 4), (1, 128, 64, 4),
+                                     (3, 16, 8, 2)])
+def test_conv1d_tap(rng, B, L, D, K, dtype):
+    x = _rand(rng, (B, L, D), dtype)
+    w = _rand(rng, (K, D), dtype)
+    b = _rand(rng, (D,), dtype)
+    got = ops.conv1d_causal(x, w, b, interpret=True)
+    want = ref.conv1d_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("BH,Sq,Sk,D", [(3, 40, 40, 16), (2, 100, 100, 32),
+                                        (1, 64, 128, 8)])
+def test_flash_attention(rng, BH, Sq, Sk, D, causal):
+    if causal and Sq != Sk:
+        pytest.skip("causal requires square here")
+    q = _rand(rng, (BH, Sq, D), jnp.float32)
+    k = _rand(rng, (BH, Sk, D), jnp.float32)
+    v = _rand(rng, (BH, Sk, D), jnp.float32)
+    got = kfa.flash_attention(q, k, v, causal=causal, tq=32, tk=32,
+                              interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_gqa_wrapper(rng):
+    B, S, H, KVH, D = 2, 32, 8, 2, 16
+    q = _rand(rng, (B, S, H, D), jnp.float32)
+    k = _rand(rng, (B, S, KVH, D), jnp.float32)
+    v = _rand(rng, (B, S, KVH, D), jnp.float32)
+    got = ops.flash_attention(q, k, v, interpret=True)
+    from repro.nn.attention import exact_attention, _repeat_kv
+    want = exact_attention(q, _repeat_kv(k, H), _repeat_kv(v, H))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fused_vmem_budget_fallback(rng):
+    """Oversized rows must fall back to the two-stage path, still correct."""
+    x = _rand(rng, (1, 8, 2100, 1024), jnp.float32)  # row ~8.6MB*2 > budget
+    w = _rand(rng, (3, 3, 1024, 8), jnp.float32)
+    from repro.kernels.cuconv_fused import vmem_bytes
+    assert vmem_bytes(x.shape, w.shape, pad=(1, 1)) > 12 * 2**20
+    got = ops.cuconv_fused(x, w, (1, 1), interpret=True)
+    want = ref.conv2d_pad_ref(x, w, (1, 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,96 @@
+"""MoE router/dispatch invariants (hypothesis + direct)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config, smoke_variant
+from repro.nn import moe as M
+
+
+def _cfg(E=4, K=2, cf=1.25):
+    cfg = smoke_variant(get_config("deepseek-moe-16b"))
+    return dataclasses.replace(cfg, num_experts=E, experts_per_token=K,
+                               capacity_factor=cf)
+
+
+def test_dropless_equals_manual_topk(rng):
+    """Dropless MoE output == explicit per-token top-k expert mixture."""
+    cfg = _cfg()
+    p = M.moe_init(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    x = jnp.asarray(rng.normal(size=(2, 6, cfg.d_model)), jnp.float32)
+    got, _ = M.moe_fwd(p, cfg, x, dropless=True)
+
+    # manual reference
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, eidx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / gates.sum(-1, keepdims=True)
+    ex = p["experts"]
+    outs = []
+    for t in range(xt.shape[0]):
+        acc = jnp.zeros(cfg.d_model)
+        for k in range(cfg.experts_per_token):
+            e = int(eidx[t, k])
+            h = jax.nn.silu(xt[t] @ ex["wi"][e]) * (xt[t] @ ex["wg"][e])
+            acc = acc + gates[t, k] * (h @ ex["wo"][e])
+        outs.append(acc)
+    want = jnp.stack(outs).reshape(x.shape)
+    if cfg.num_shared_experts:
+        from repro.nn import layers as L
+        want = want + L.mlp_fwd(p["shared"], x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_gate_mass_conserved(E, K, seed):
+    """Renormalized top-k gates sum to 1 per token."""
+    K = min(K, E)
+    rng = np.random.default_rng(seed)
+    probs = jax.nn.softmax(
+        jnp.asarray(rng.normal(size=(10, E)), jnp.float32), -1)
+    gates, _ = jax.lax.top_k(probs, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_capacity_drops_reported(rng):
+    """With a tiny capacity factor, dropped_frac must be > 0; with
+    dropless it must be ~0."""
+    cfg = _cfg(cf=0.1)
+    p = M.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 32, cfg.d_model)), jnp.float32)
+    _, aux_tight = M.moe_fwd(p, cfg, x, dropless=False)
+    _, aux_free = M.moe_fwd(p, cfg, x, dropless=True)
+    assert float(aux_tight["dropped_frac"]) > 0.0
+    assert float(aux_free["dropped_frac"]) == 0.0
+
+
+def test_group_invariance_when_dropless(rng):
+    """Dropless routing is per-token, so grouping must not change outputs."""
+    cfg = _cfg()
+    p = M.moe_init(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    x = jnp.asarray(rng.normal(size=(4, 8, cfg.d_model)), jnp.float32)
+    y1, _ = M.moe_fwd(p, cfg, x, dropless=True, n_groups=1)
+    y2, _ = M.moe_fwd(p, cfg, x, dropless=True, n_groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_load_balance_loss_minimized_by_uniform():
+    """The aux loss is minimized (==1 by construction) at uniform routing."""
+    E = 8
+    me = jnp.full((E,), 1.0 / E)
+    ce = jnp.full((E,), 2.0 / E)   # K=2 routed fractions
+    uniform = E * jnp.sum(me * ce)
+    skew_me = jnp.zeros((E,)).at[0].set(1.0)
+    skew_ce = jnp.zeros((E,)).at[0].set(2.0)
+    skewed = E * jnp.sum(skew_me * skew_ce)
+    assert float(skewed) > float(uniform)
