@@ -19,6 +19,7 @@ import numpy as np
 from benchmarks.common import csv_row, time_fn
 from repro.configs import cnn_paper as cp
 from repro.core import cuconv as cc
+from repro.core.convspec import ConvSpec, plan
 
 QUICK_SET = [
     # (hw, k, M, C) drawn from the paper's profiled configs + coverage
@@ -77,12 +78,18 @@ def run(quick=True):
             by_k.setdefault(k, []).append(speedup)
             wino = (f" winograd={t['winograd']:.0f}us"
                     if "winograd" in t else "")
+            # what the ConvSpec planner would run for this configuration
+            p = plan(ConvSpec((b, hw, hw, C), (k, k, C, M), (1, 1),
+                              ((k - 1) // 2, (k - 1) // 2)))
+            chosen = (f" plan={p.algorithm}[{p.source}]"
+                      + (f"@{t[p.algorithm]:.0f}us"
+                         if p.algorithm in t else ""))
             rows.append(csv_row(
                 f"fig{5 if k == 1 else (6 if k == 3 else 7)}/"
                 f"{hw}-{M}-{C}-b{b}", t["cuconv"],
                 f"speedup={speedup:.2f} lax={t['lax']:.0f}us "
                 f"im2col={t['im2col']:.0f}us "
-                f"two_stage={t['cuconv_two_stage']:.0f}us" + wino))
+                f"two_stage={t['cuconv_two_stage']:.0f}us" + wino + chosen))
     for k, sp in sorted(by_k.items()):
         rows.append(csv_row(
             f"fig567/summary_{k}x{k}", 0.0,

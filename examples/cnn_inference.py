@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.autotune import select_algorithm
+from repro.core.convspec import ConvSpec, plan
 from repro.models.cnn import SimpleCNN, squeezenet_like
 
 model = squeezenet_like()
@@ -21,11 +21,14 @@ params = model.init(jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(1, 64, 64, 3)), jnp.float32)
 
-print("per-layer algorithm selection (input 64x64x3, batch 1):")
+print("per-layer conv plans (input 64x64x3, batch 1, fused bias+ReLU):")
 h, c = 64, 3
 for i, (kh, kw, co, s) in enumerate(model.spec):
-    algo = select_algorithm((1, h, h, c), (kh, kw, c, co), s)
-    print(f"  layer {i:2d}  {kh}x{kw} {c:4d}->{co:4d} stride {s}:  {algo}")
+    spec = ConvSpec((1, h, h, c), (kh, kw, c, co), (s, s),
+                    ((kh - 1) // 2, (kw - 1) // 2), "float32", "bias_relu")
+    p = plan(spec)
+    print(f"  layer {i:2d}  {kh}x{kw} {c:4d}->{co:4d} stride {s}:  "
+          f"{p.algorithm:8s} [{p.source}] {p.reason}")
     h, c = h // s, co
 
 lib = jax.jit(lambda p, x: model.apply(p, x, algorithm="lax"))

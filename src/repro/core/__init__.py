@@ -1,2 +1,3 @@
 from repro.core.cuconv import (  # noqa: F401
     conv2d, cuconv_stage1, cuconv_stage2, ALGORITHMS)
+from repro.core.convspec import ConvSpec, ConvPlan, plan  # noqa: F401

@@ -1,57 +1,135 @@
-"""Per-layer convolution algorithm selection.
+"""Measured per-layer algorithm selection, persisted across processes.
 
 Mirrors the deployment behaviour the paper relies on ("most frameworks
 automatically select the best-performing convolution algorithm for each
-convolutional layer"): a heuristic mode encoding the paper's measured
-regions, and a measured mode that times every candidate and caches the
-winner per configuration — the cuDNN-style exhaustive search the paper
-used for its baselines.
+convolutional layer"):
+
+  * heuristic mode — ``convspec.heuristic_algorithm`` encodes the
+    paper's measured regions; ``select_algorithm`` is the back-compat
+    shape-tuple wrapper.
+  * measured mode — ``measure_algorithm`` times every viable candidate
+    (compiled, synced) and records the winner keyed by
+    ``(backend, ConvSpec.key())`` in a JSON cache under
+    ``$REPRO_CACHE_DIR`` (default ``~/.cache/repro``), so one process's
+    measurement sweep pays for every later process.  ``plan()`` consults
+    this cache before falling back to the heuristic.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import json
+import os
 import time
-from typing import Dict, Tuple
+from pathlib import Path
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
-_MEASURED_CACHE: Dict[Tuple, str] = {}
+from repro.core.convspec import ConvSpec, heuristic_algorithm, supports
 
+# in-memory mirror of the persisted JSON: {cache_key: algorithm}
+_CACHE: Dict[str, str] = {}
+_CACHE_PATH: Optional[Path] = None     # path _CACHE was loaded from
+
+
+def _cache_path() -> Path:
+    d = os.environ.get("REPRO_CACHE_DIR",
+                       os.path.join(os.path.expanduser("~"), ".cache",
+                                    "repro"))
+    return Path(d) / "autotune.json"
+
+
+def _ensure_loaded() -> None:
+    global _CACHE, _CACHE_PATH
+    path = _cache_path()
+    if path == _CACHE_PATH:
+        return
+    _CACHE_PATH = path
+    _CACHE = {}
+    try:
+        _CACHE.update(json.loads(path.read_text()))
+    except (OSError, ValueError):
+        pass                            # no/corrupt cache: start empty
+
+
+def _persist() -> None:
+    path = _cache_path()
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        # merge what concurrent processes persisted since our load, so a
+        # stale snapshot never clobbers their measurements
+        try:
+            merged = json.loads(path.read_text())
+        except (OSError, ValueError):
+            merged = {}
+        merged.update(_CACHE)
+        _CACHE.update(merged)
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(merged, indent=0, sort_keys=True))
+        os.replace(tmp, path)           # atomic: readers never see a torn file
+    except OSError:
+        pass                            # read-only FS: stay in-memory only
+
+
+def _key(spec: ConvSpec, backend: str) -> str:
+    # the epilogue rides whatever algorithm wins — measurements taken
+    # without it must serve the bias/ReLU-fused specs conv_block builds,
+    # so the cache key is epilogue-insensitive
+    if spec.epilogue != "none":
+        spec = dataclasses.replace(spec, epilogue="none")
+    return f"{backend}/{spec.key()}"
+
+
+def cached_best(spec: ConvSpec, backend: Optional[str] = None) -> Optional[str]:
+    """Persisted measured winner for this spec on this backend, if any."""
+    _ensure_loaded()
+    return _CACHE.get(_key(spec, backend or jax.default_backend()))
+
+
+def record_best(spec: ConvSpec, backend: str, algorithm: str) -> None:
+    _ensure_loaded()
+    _CACHE[_key(spec, backend)] = algorithm
+    _persist()
+
+
+def clear_cache() -> None:
+    """Drop the in-memory mirror (tests); the JSON file is untouched."""
+    global _CACHE_PATH
+    _CACHE_PATH = None
+
+
+# ---------------------------------------------------------------------------
+# public API
 
 def select_algorithm(x_shape, w_shape, stride=1) -> str:
-    """Heuristic choice, encoding the paper's empirical regions (fig 5-7):
-
-    - 1x1 filters: cuConv's best region (single GEMM, no stage 2);
-    - small batch + small spatial: cuConv wins (its thread-level
-      parallelism advantage on GPU; on TPU the grid fills cores even at
-      batch 1);
-    - large 3x3 workloads: the library algorithm (Winograd's region in the
-      paper) keeps the edge.
-    """
-    n, h, w_sp, c = x_shape
-    kh, kw, _, m = w_shape
-    if stride != 1:
-        return "lax"
-    if kh == 1 and kw == 1:
-        return "cuconv"
-    if n == 1 or (h <= 14 and n <= 16):
-        return "cuconv"
-    if kh == 3 and kw == 3:
-        return "winograd"     # Winograd-dominated region in the paper
-    return "cuconv"
+    """Heuristic choice for a configuration (paper regions; see
+    convspec.heuristic_algorithm for the region map)."""
+    spec = ConvSpec(tuple(map(int, x_shape)), tuple(map(int, w_shape)),
+                    (stride, stride) if isinstance(stride, int)
+                    else tuple(stride))
+    return heuristic_algorithm(spec, jax.default_backend())[0]
 
 
 def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
                       candidates=("lax", "im2col", "winograd",
                                   "cuconv_two_stage", "cuconv")) -> str:
-    """Time every candidate (compiled, synced) and cache the winner."""
+    """Time every viable candidate (compiled, synced), persist the winner.
+
+    The cuDNN-style exhaustive search the paper used for its baselines;
+    ``plan()`` serves the recorded winner to every later process.
+    """
     from repro.core.cuconv import ALGORITHMS
-    key = (x.shape, w.shape, stride, str(x.dtype))
-    if key in _MEASURED_CACHE:
-        return _MEASURED_CACHE[key]
+    spec = ConvSpec.for_conv(x, w, stride, padding)
+    backend = jax.default_backend()
+    hit = cached_best(spec, backend)
+    if hit is not None:
+        return hit
     best, best_t = None, float("inf")
     for name in candidates:
+        if not supports(name, spec)[0]:
+            continue
         fn = jax.jit(functools.partial(ALGORITHMS[name], stride=stride,
                                        padding=padding))
         try:
@@ -66,5 +144,6 @@ def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
             continue
         if t < best_t:
             best, best_t = name, t
-    _MEASURED_CACHE[key] = best or "lax"
-    return _MEASURED_CACHE[key]
+    best = best or "lax"
+    record_best(spec, backend, best)
+    return best

@@ -1,0 +1,278 @@
+"""ConvSpec plan layer: one descriptor-driven entry point for all convs.
+
+cuDNN's deployment story (and the paper's: "frameworks automatically
+select the best-performing convolution algorithm for each layer") is a
+descriptor + planner, not a pile of per-call-site heuristics.  This
+module is that seam (DESIGN.md §4):
+
+  ConvSpec   frozen descriptor of one convolution: shapes, stride,
+             padding, dtype, epilogue.  Hashable; the key for every
+             cache (measured autotune, serving plans).
+  plan()     the ONLY place algorithm choice lives.  Consults, in order:
+             a forced algorithm (with capability guards), the persisted
+             measured-autotune cache, and the paper's heuristic regions;
+             applies the fused-kernel VMEM budget fallback that used to
+             hide in kernels/ops.py.
+  ConvPlan   executable result: call it with (x, w, bias); `explain()`
+             returns a stable one-line story for benchmarks/debugging.
+
+Everything downstream (core.cuconv.conv2d, models.cnn, benchmarks,
+serve) routes through plan(); kernels/ops.py stays policy-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Pad = Union[int, Tuple[int, int], str]
+
+# VMEM working-set budget for the fused Pallas kernel (per-core VMEM is
+# ~16 MB; leave headroom for Mosaic's own buffers)
+FUSED_VMEM_BUDGET = 12 * 1024 * 1024
+
+EPILOGUES = ("none", "bias", "relu", "bias_relu")
+
+
+def normalize_pad(padding: Pad, kh: int, kw: int) -> Tuple[int, int]:
+    if padding == "same":
+        return (kh - 1) // 2, (kw - 1) // 2
+    if padding == "valid":
+        return 0, 0
+    if isinstance(padding, int):
+        return padding, padding
+    return tuple(padding)  # type: ignore[return-value]
+
+
+def _norm_stride(stride) -> Tuple[int, int]:
+    return (stride, stride) if isinstance(stride, int) else tuple(stride)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Descriptor of one convolution: the planner's (and caches') key."""
+    in_shape: Tuple[int, int, int, int]       # (N, H, W, C) NHWC
+    filter_shape: Tuple[int, int, int, int]   # (KH, KW, C, M) HWIO
+    stride: Tuple[int, int] = (1, 1)          # (sh, sw)
+    padding: Tuple[int, int] = (0, 0)         # (ph, pw), pre-normalized
+    dtype: str = "float32"
+    epilogue: str = "none"                    # none | bias | relu | bias_relu
+
+    def __post_init__(self):
+        if self.epilogue not in EPILOGUES:
+            raise ValueError(f"epilogue {self.epilogue!r} not in {EPILOGUES}")
+        if self.in_shape[3] != self.filter_shape[2]:
+            raise ValueError(f"channel mismatch: input {self.in_shape} "
+                             f"vs filter {self.filter_shape}")
+
+    @classmethod
+    def for_conv(cls, x, w, stride=1, padding: Pad = "same",
+                 bias=None, activation: Optional[str] = None) -> "ConvSpec":
+        """Build a spec from (possibly traced) operands + call options."""
+        kh, kw = int(w.shape[0]), int(w.shape[1])
+        epi = ("bias_relu" if bias is not None and activation == "relu"
+               else "bias" if bias is not None
+               else "relu" if activation == "relu" else "none")
+        return cls(tuple(map(int, x.shape)), tuple(map(int, w.shape)),
+                   _norm_stride(stride), normalize_pad(padding, kh, kw),
+                   str(x.dtype), epi)
+
+    # -- derived geometry ------------------------------------------------
+    @property
+    def out_shape(self) -> Tuple[int, int, int, int]:
+        n, h, w, _ = self.in_shape
+        kh, kw, _, m = self.filter_shape
+        (sh, sw), (ph, pw) = self.stride, self.padding
+        return (n, (h + 2 * ph - kh) // sh + 1,
+                (w + 2 * pw - kw) // sw + 1, m)
+
+    @property
+    def is_1x1(self) -> bool:
+        return self.filter_shape[0] == 1 and self.filter_shape[1] == 1
+
+    @property
+    def unit_stride(self) -> bool:
+        return self.stride == (1, 1)
+
+    @property
+    def has_bias(self) -> bool:
+        return self.epilogue in ("bias", "bias_relu")
+
+    @property
+    def wants_relu(self) -> bool:
+        return self.epilogue in ("relu", "bias_relu")
+
+    def key(self) -> str:
+        """Stable string key for persisted caches."""
+        n, h, w, c = self.in_shape
+        kh, kw, _, m = self.filter_shape
+        return (f"n{n}h{h}w{w}c{c}-k{kh}x{kw}m{m}-s{self.stride[0]}x"
+                f"{self.stride[1]}-p{self.padding[0]}x{self.padding[1]}-"
+                f"{self.dtype}-{self.epilogue}")
+
+
+# ---------------------------------------------------------------------------
+# capability / cost model
+
+def fused_vmem_bytes(spec: ConvSpec) -> int:
+    from repro.kernels.cuconv_fused import vmem_bytes
+    itemsize = jnp.dtype(spec.dtype).itemsize
+    return vmem_bytes(spec.in_shape, spec.filter_shape, pad=spec.padding,
+                      stride=spec.stride, itemsize=itemsize)
+
+
+def supports(algorithm: str, spec: ConvSpec) -> Tuple[bool, str]:
+    """Can `algorithm` execute `spec` exactly (ignoring speed)?"""
+    if algorithm == "cuconv_pallas":
+        if fused_vmem_bytes(spec) > FUSED_VMEM_BUDGET:
+            return False, (f"fused working set "
+                           f"{fused_vmem_bytes(spec) / 2**20:.1f} MB "
+                           f"> {FUSED_VMEM_BUDGET / 2**20:.0f} MB VMEM budget")
+        return True, "fused Pallas kernel fits VMEM"
+    if algorithm == "conv1x1_pallas":
+        if (not spec.is_1x1 or not spec.unit_stride
+                or spec.padding != (0, 0)):
+            return False, "conv1x1 kernel needs 1x1 filter, stride 1, pad 0"
+        return True, "1x1 GEMM kernel (all pixels MXU-tiled)"
+    if algorithm == "cuconv_two_stage_pallas" and not spec.unit_stride:
+        return False, "two-stage Pallas kernels are stride-1 only"
+    if algorithm == "winograd":
+        # executor falls back to lax internally for non-3x3; treat the
+        # non-Winograd region as unsupported so plans stay honest
+        if spec.filter_shape[:2] != (3, 3) or not spec.unit_stride:
+            return False, "Winograd F(2x2,3x3) needs 3x3 stride-1"
+        return True, "3x3 stride-1: Winograd region"
+    return True, "generic algorithm"
+
+
+def heuristic_algorithm(spec: ConvSpec, backend: str) -> Tuple[str, str]:
+    """The paper's empirical regions (figs 5-7), adapted per backend.
+
+    - 1x1 filters: cuConv's best region (single GEMM, no stage 2);
+    - small batch + small spatial: cuConv wins (its thread-level
+      parallelism advantage on GPU; on TPU the grid fills cores even at
+      batch 1);
+    - large 3x3 workloads: the library algorithm (Winograd's region in
+      the paper) keeps the edge;
+    - on TPU the fused Pallas kernel takes any region cuConv would,
+      including strided convs; elsewhere Pallas runs in interpret mode
+      (orders of magnitude slower), so XLA paths are chosen instead.
+    """
+    n, h, _, _ = spec.in_shape
+    kh, kw = spec.filter_shape[:2]
+    on_tpu = backend == "tpu"
+    fused_ok, _ = supports("cuconv_pallas", spec)
+    if not spec.unit_stride:
+        if on_tpu and fused_ok:
+            return "cuconv_pallas", "strided conv: fused kernel on TPU"
+        return "lax", "strided conv: library kernel off-TPU"
+    if spec.is_1x1:
+        if on_tpu and spec.epilogue == "none" and supports(
+                "conv1x1_pallas", spec)[0]:
+            # no epilogue to fuse: the dedicated GEMM kernel tiles all
+            # N*H*W pixels onto the MXU (the fused kernel only fills
+            # OW rows per grid step)
+            return "conv1x1_pallas", "1x1: dedicated GEMM kernel"
+        if on_tpu and fused_ok:
+            return "cuconv_pallas", "1x1: fused GEMM + epilogue in VMEM"
+        return "cuconv", "1x1: single GEMM, no stage 2 (best region)"
+    if n == 1 or (h <= 14 and n <= 16):
+        if on_tpu and fused_ok:
+            return "cuconv_pallas", "small batch/spatial: cuConv region"
+        return "cuconv", "small batch/spatial: cuConv region"
+    if kh == 3 and kw == 3:
+        return "winograd", "large 3x3: Winograd region in the paper"
+    return "cuconv", "default cuConv region"
+
+
+# ---------------------------------------------------------------------------
+# plan
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """Executable algorithm choice for one ConvSpec."""
+    spec: ConvSpec
+    algorithm: str
+    source: str                       # heuristic | measured | forced | fallback
+    reason: str
+    backend: str = "cpu"
+    interpret: Optional[bool] = None  # forwarded to Pallas executors
+
+    def explain(self) -> str:
+        return (f"{self.spec.key()} -> {self.algorithm} "
+                f"[{self.source}] {self.reason}")
+
+    # -- execution -------------------------------------------------------
+    def __call__(self, x, w, bias=None):
+        spec = self.spec
+        if spec.has_bias and bias is None:
+            raise ValueError(f"plan epilogue {spec.epilogue!r} needs a bias")
+        if self.algorithm == "cuconv_pallas":
+            # epilogue fused into the kernel: accumulator takes
+            # bias+activation in VMEM before its single HBM write
+            from repro.kernels import ops
+            return ops.cuconv_fused(
+                x, w, spec.padding, stride=spec.stride,
+                bias=bias if spec.has_bias else None,
+                activation="relu" if spec.wants_relu else None,
+                interpret=self.interpret)
+        from repro.core import cuconv
+        kwargs = {}
+        if self.algorithm in ("conv1x1_pallas", "cuconv_two_stage_pallas"):
+            kwargs["interpret"] = self.interpret   # honor debug requests
+        y = cuconv.ALGORITHMS[self.algorithm](
+            x, w, stride=spec.stride, padding=spec.padding, **kwargs)
+        # two-stage epilogue for non-fused paths: one extra HBM round trip
+        if spec.has_bias:
+            y = y + bias
+        if spec.wants_relu:
+            y = jax.nn.relu(y)
+        return y
+
+
+def plan(spec: ConvSpec, force: Optional[str] = None,
+         backend: Optional[str] = None,
+         interpret: Optional[bool] = None) -> ConvPlan:
+    """All conv algorithm choice, in one place.
+
+    Order: forced algorithm (capability-guarded, falling back like the
+    old ops.py VMEM check did) > persisted measured-autotune winner >
+    paper-region heuristic.
+    """
+    backend = backend or jax.default_backend()
+
+    if force is not None:
+        from repro.core import cuconv
+        if force not in cuconv.ALGORITHMS:
+            raise KeyError(f"unknown algorithm {force!r}; "
+                           f"known: {sorted(cuconv.ALGORITHMS)}")
+        ok, why = supports(force, spec)
+        if ok:
+            return ConvPlan(spec, force, "forced", why, backend, interpret)
+        fb, fb_why = _fallback_for(force, spec)
+        return ConvPlan(spec, fb, "fallback",
+                        f"{force} unsupported ({why}); {fb_why}",
+                        backend, interpret)
+
+    from repro.core import autotune
+    measured = autotune.cached_best(spec, backend)
+    if measured is not None and supports(measured, spec)[0]:
+        return ConvPlan(spec, measured, "measured",
+                        "persisted autotune winner", backend, interpret)
+
+    algo, reason = heuristic_algorithm(spec, backend)
+    return ConvPlan(spec, algo, "heuristic", reason, backend, interpret)
+
+
+def _fallback_for(algorithm: str, spec: ConvSpec) -> Tuple[str, str]:
+    """Closest supported stand-in for an unsupported forced algorithm."""
+    if algorithm == "cuconv_pallas":
+        if spec.unit_stride:
+            # the old kernels/ops.py behaviour: oversized rows take the
+            # two-stage Pallas kernels (HBM temporaries, bounded VMEM)
+            return ("cuconv_two_stage_pallas",
+                    "two-stage kernels bound the VMEM working set")
+        return "cuconv", "fused-tap XLA path handles any stride"
+    return "lax", "library conv covers all geometries"

@@ -10,36 +10,42 @@ stage 2 entirely (the paper's best-case region).
 TPU adaptation (DESIGN.md §2): NHWC instead of NCHW so the channel
 contraction is lane-contiguous; each per-tap GEMM maps onto the MXU.
 
-All algorithms below are numerically equivalent (property-tested):
+All algorithms below are numerically equivalent (property-tested) and
+policy-free executors: which one runs for a given configuration is
+decided exclusively by ``core.convspec.plan`` (DESIGN.md §4), which
+``conv2d(..., algorithm="auto")`` wraps.
 
   lax              jax.lax.conv_general_dilated — the library baseline
                    (the cuDNN stand-in of the paper's comparison)
   im2col           explicit patch matrix + one GEMM — cuDNN "GEMM" variant
   cuconv_two_stage faithful paper algorithm: stage-1 temporaries
                    materialized (KH*KW, N, OH, OW, M), stage-2 sum
+  cuconv_two_stage_pallas
+                   the same pipeline on the Pallas stage-1/stage-2
+                   kernels (stride 1) — the planner's VMEM fallback
   cuconv           beyond-paper fused tap accumulation (no temporaries);
                    the paper's "work-fusion" future-work realized
-  cuconv_pallas    the fused Pallas TPU kernel (stride 1)
+  cuconv_pallas    the fused Pallas TPU kernel (any stride, fused
+                   bias/ReLU epilogue)
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.convspec import normalize_pad as _norm_pad_kk
 
 Pad = Union[int, Tuple[int, int], str]
 
 
 def _norm_pad(padding: Pad, kh: int, kw: int) -> Tuple[int, int]:
-    if padding == "same":
-        return (kh - 1) // 2, (kw - 1) // 2
-    if padding == "valid":
-        return 0, 0
-    if isinstance(padding, int):
-        return padding, padding
-    return tuple(padding)  # type: ignore[return-value]
+    return _norm_pad_kk(padding, kh, kw)
+
+
+def _norm_stride(stride) -> Tuple[int, int]:
+    return (stride, stride) if isinstance(stride, int) else tuple(stride)
 
 
 def _out_size(h, kh, ph, s):
@@ -60,7 +66,7 @@ def conv_lax(x, w, stride=1, padding: Pad = "same"):
     kh, kw = w.shape[0], w.shape[1]
     ph, pw = _norm_pad(padding, kh, kw)
     return jax.lax.conv_general_dilated(
-        x, w, window_strides=(stride, stride),
+        x, w, window_strides=_norm_stride(stride),
         padding=((ph, ph), (pw, pw)),
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
@@ -74,18 +80,12 @@ def conv_im2col(x, w, stride=1, padding: Pad = "same"):
     """
     kh, kw, C, M = w.shape
     ph, pw = _norm_pad(padding, kh, kw)
+    sh, sw = _norm_stride(stride)
     xp = _pad_input(x, ph, pw)
-    N, Hp, Wp, _ = xp.shape
-    oh, ow = _out_size(x.shape[1], kh, ph, stride), _out_size(
-        x.shape[2], kw, pw, stride)
-    cols = []
-    for i in range(kh):
-        for j in range(kw):
-            cols.append(jax.lax.slice(
-                xp, (0, i, j, 0),
-                (N, i + stride * (oh - 1) + 1, j + stride * (ow - 1) + 1, C),
-                (1, stride, stride, 1)))
-    patches = jnp.stack(cols, axis=3)                    # (N,OH,OW,KK,C)
+    N = xp.shape[0]
+    oh, ow = _out_size(x.shape[1], kh, ph, sh), _out_size(
+        x.shape[2], kw, pw, sw)
+    patches = jnp.stack(_tap_views(xp, kh, kw, oh, ow, (sh, sw)), axis=3)
     patches = patches.reshape(N * oh * ow, kh * kw * C)  # materialized!
     out = patches @ w.reshape(kh * kw * C, M)
     return out.reshape(N, oh, ow, M)
@@ -97,13 +97,14 @@ def conv_im2col(x, w, stride=1, padding: Pad = "same"):
 def _tap_views(xp, kh, kw, oh, ow, stride):
     """The KH*KW shifted input views (XLA slices, nothing materialized)."""
     N, _, _, C = xp.shape
+    sh, sw = _norm_stride(stride)
     views = []
     for i in range(kh):
         for j in range(kw):
             views.append(jax.lax.slice(
                 xp, (0, i, j, 0),
-                (N, i + stride * (oh - 1) + 1, j + stride * (ow - 1) + 1, C),
-                (1, stride, stride, 1)))
+                (N, i + sh * (oh - 1) + 1, j + sw * (ow - 1) + 1, C),
+                (1, sh, sw, 1)))
     return views
 
 
@@ -115,10 +116,11 @@ def cuconv_stage1(x, w, stride=1, padding: Pad = "same"):
     """
     kh, kw, C, M = w.shape
     ph, pw = _norm_pad(padding, kh, kw)
+    sh, sw = _norm_stride(stride)
     xp = _pad_input(x, ph, pw)
-    oh = _out_size(x.shape[1], kh, ph, stride)
-    ow = _out_size(x.shape[2], kw, pw, stride)
-    views = _tap_views(xp, kh, kw, oh, ow, stride)
+    oh = _out_size(x.shape[1], kh, ph, sh)
+    ow = _out_size(x.shape[2], kw, pw, sw)
+    views = _tap_views(xp, kh, kw, oh, ow, (sh, sw))
     taps = w.reshape(kh * kw, C, M)
     outs = [jnp.einsum("nhwc,cm->nhwm", v, taps[t],
                        preferred_element_type=jnp.float32)
@@ -148,12 +150,13 @@ def conv_cuconv(x, w, stride=1, padding: Pad = "same"):
     """Fused tap accumulation (beyond-paper; no HBM temporaries)."""
     kh, kw, C, M = w.shape
     ph, pw = _norm_pad(padding, kh, kw)
+    sh, sw = _norm_stride(stride)
     xp = _pad_input(x, ph, pw)
-    oh = _out_size(x.shape[1], kh, ph, stride)
-    ow = _out_size(x.shape[2], kw, pw, stride)
+    oh = _out_size(x.shape[1], kh, ph, sh)
+    ow = _out_size(x.shape[2], kw, pw, sw)
     taps = w.reshape(kh * kw, C, M)
     acc = None
-    for t, v in enumerate(_tap_views(xp, kh, kw, oh, ow, stride)):
+    for t, v in enumerate(_tap_views(xp, kh, kw, oh, ow, (sh, sw))):
         y = jnp.einsum("nhwc,cm->nhwm", v, taps[t],
                        preferred_element_type=jnp.float32)
         acc = y if acc is None else acc + y
@@ -162,21 +165,48 @@ def conv_cuconv(x, w, stride=1, padding: Pad = "same"):
 
 def conv_cuconv_pallas(x, w, stride=1, padding: Pad = "same",
                        interpret: Optional[bool] = None):
-    """Fused Pallas TPU kernel (stride 1); falls back to jnp otherwise."""
+    """Fused Pallas TPU kernel: any stride >= 1 (policy-free executor —
+    VMEM budgeting lives in convspec.plan)."""
     from repro.kernels import ops
-    if stride != 1:
-        return conv_cuconv(x, w, stride, padding)
     kh, kw = w.shape[0], w.shape[1]
     ph, pw = _norm_pad(padding, kh, kw)
-    return ops.cuconv_fused(x, w, (ph, pw), interpret=interpret)
+    return ops.cuconv_fused(x, w, (ph, pw), stride=_norm_stride(stride),
+                            interpret=interpret)
+
+
+def conv_conv1x1_pallas(x, w, stride=1, padding: Pad = "same",
+                        interpret: Optional[bool] = None):
+    """Dedicated 1x1 GEMM kernel: all N*H*W pixels flattened into MXU
+    tiles — the paper's best-case region on its natural kernel."""
+    kh, kw = w.shape[0], w.shape[1]
+    if ((kh, kw) != (1, 1) or _norm_stride(stride) != (1, 1)
+            or _norm_pad(padding, kh, kw) != (0, 0)):
+        raise ValueError("conv1x1 kernel needs 1x1 filter, stride 1, pad 0; "
+                         "plan() routes other specs elsewhere")
+    from repro.kernels import ops
+    return ops.conv1x1(x, w, interpret=interpret)
+
+
+def conv_cuconv_two_stage_pallas(x, w, stride=1, padding: Pad = "same",
+                                 interpret: Optional[bool] = None):
+    """Faithful two-kernel Pallas pipeline (stride 1): stage-1 HBM
+    temporaries + stage-2 sum — the planner's VMEM-bounded fallback."""
+    if _norm_stride(stride) != (1, 1):
+        raise ValueError("two-stage Pallas kernels are stride-1 only; "
+                         "plan() routes strided specs elsewhere")
+    from repro.kernels import ops
+    kh, kw = w.shape[0], w.shape[1]
+    ph, pw = _norm_pad(padding, kh, kw)
+    return ops.cuconv_two_stage(x, w, (ph, pw), interpret=interpret)
 
 
 def conv_winograd_or_fallback(x, w, stride=1, padding: Pad = "same"):
     """Winograd F(2x2,3x3) for 3x3/stride-1, library conv otherwise —
     mirrors cuDNN exposing Winograd only where it is defined."""
-    if w.shape[0] == 3 and w.shape[1] == 3 and stride == 1:
+    if (w.shape[0] == 3 and w.shape[1] == 3
+            and _norm_stride(stride) == (1, 1)):
         from repro.core.winograd import conv_winograd
-        return conv_winograd(x, w, stride, padding)
+        return conv_winograd(x, w, 1, padding)
     return conv_lax(x, w, stride, padding)
 
 
@@ -185,14 +215,27 @@ ALGORITHMS = {
     "im2col": conv_im2col,
     "winograd": conv_winograd_or_fallback,
     "cuconv_two_stage": conv_cuconv_two_stage,
+    "conv1x1_pallas": conv_conv1x1_pallas,
+    "cuconv_two_stage_pallas": conv_cuconv_two_stage_pallas,
     "cuconv": conv_cuconv,
     "cuconv_pallas": conv_cuconv_pallas,
 }
 
 
-def conv2d(x, w, stride=1, padding: Pad = "same", algorithm="auto"):
-    """Public conv entry point.  x: (N,H,W,C) NHWC; w: (KH,KW,C,M) HWIO."""
-    if algorithm == "auto":
-        from repro.core.autotune import select_algorithm
-        algorithm = select_algorithm(x.shape, w.shape, stride)
-    return ALGORITHMS[algorithm](x, w, stride, padding)
+def conv2d(x, w, stride=1, padding: Pad = "same", algorithm="auto",
+           bias=None, activation: Optional[str] = None):
+    """Public conv entry point: a thin wrapper over the ConvSpec planner.
+
+    x: (N,H,W,C) NHWC; w: (KH,KW,C,M) HWIO; bias: optional (M,);
+    activation: None | 'relu'.  algorithm="auto" lets plan() choose
+    (measured cache > paper-region heuristic); naming an algorithm
+    forces it, still subject to plan's capability guards (e.g. the
+    fused kernel's VMEM budget).  The bias/activation epilogue is fused
+    into the Pallas kernel when that path is planned, and applied as XLA
+    ops otherwise.
+    """
+    from repro.core.convspec import ConvSpec, plan
+    spec = ConvSpec.for_conv(x, w, stride, padding, bias=bias,
+                             activation=activation)
+    p = plan(spec, force=None if algorithm == "auto" else algorithm)
+    return p(x, w, bias)

@@ -1,0 +1,1 @@
+"""Distributed execution utilities: sharding rules and gradient compression."""

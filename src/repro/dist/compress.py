@@ -1,0 +1,80 @@
+"""Int8 gradient compression with error feedback.
+
+Symmetric per-block int8: each flattened 256-element block is scaled by
+max|block|/127, so the worst-case per-element error is scale/2 <=
+max|block|/254.  Error feedback carries the quantization residual into
+the next step, so the *sum* of compressed gradients tracks the true sum
+to within one quantization step (test_checkpoint asserts both bounds).
+
+The int8 payload (q, per-block scales) is what a cross-pod DCN
+transport would move; `compressed_psum` models that all-reduce inside
+shard_map.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize(x, block: int = BLOCK):
+    """x: float array -> (q int8, scales (nblocks, 1) f32, orig shape)."""
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return q, scale, shape
+
+
+def dequantize(q, scale, shape):
+    # no zero-guard needed: a zero scale means the block quantized to all
+    # zeros, and 0 * 0 is already right (the guard lives in quantize)
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def quantize_with_feedback(g, err) -> Tuple[Tuple, Any]:
+    """Compress (g + err); the new residual is what compression lost."""
+    target = g.astype(jnp.float32) + err
+    q, s, shape = quantize(target)
+    new_err = target - dequantize(q, s, shape)
+    return (q, s, shape), new_err
+
+
+def init_feedback(params):
+    return jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+
+
+def tree_quantize_with_feedback(grads, ef):
+    """Per-leaf EF compression; returns (dequantized grads, new ef tree).
+    The dequantized values are what the optimizer consumes — the int8
+    payload is the wire format."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    deqs, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        (q, s, shape), ne = quantize_with_feedback(g, e)
+        deqs.append(dequantize(q, s, shape))
+        errs.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, deqs),
+            jax.tree_util.tree_unflatten(treedef, errs))
+
+
+def compressed_psum(x, axis_name: str, err):
+    """EF-compressed all-reduce over `axis_name` (inside shard_map):
+    each participant contributes its dequantized int8 payload."""
+    (q, s, shape), new_err = quantize_with_feedback(x, err)
+    out = jax.lax.psum(dequantize(q, s, shape), axis_name)
+    return out, new_err

@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules for every architecture's param pytree.
+
+The layer stack (nn/*) is framework-free: params are plain dict pytrees.
+Sharding metadata is attached here by *path pattern* — each leaf path is
+matched against `_AXIS_TABLE` to get a tuple of logical axis names for
+its trailing dims (any extra leading dims are the stacked-layer axis),
+and `make_rules` maps logical names onto mesh axes per execution mode:
+
+  embed (d_model)  -> 'data'   FSDP: gathered around each matmul
+  heads/ff/vocab   -> 'model'  tensor parallel
+  experts          -> 'model'  expert parallel (the bank's E axis)
+  moe_ff / latent  -> None     already covered by EP / too small to cut
+  batch            -> 'data' (or ('pod','data') across pods)
+
+Big matrices therefore get BOTH an FSDP and a TP axis, e.g.
+``attn/wq/w -> P(None, 'data', 'model')`` — the 2-D sharding the
+dry-run's collective model assumes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: F401
+
+# ---------------------------------------------------------------------------
+# path -> logical axes for the trailing dims (first match wins)
+
+_AXIS_TABLE = [
+    # embeddings / head
+    (r"embed/embedding$",            ("vocab", "embed")),
+    (r"lm_head/w$",                  ("embed", "vocab")),
+    (r"lm_head/b$",                  ("vocab",)),
+    # any norm scale (ln1/ln2/q_norm/k_norm/kv_norm/final_norm/ssm norm)
+    (r"scale$",                      ("null",)),
+    # attention (GQA + MLA)
+    (r"attn/w[qkv]/w$",              ("embed", "heads")),
+    (r"attn/w[qkv]/b$",              ("heads",)),
+    (r"attn/wo/w$",                  ("heads", "embed")),
+    (r"attn/wo/b$",                  ("embed",)),
+    (r"attn/w_dkv/w$",               ("embed", "latent")),
+    (r"attn/w_ukv/w$",               ("latent", "heads")),
+    # MoE (experts bank leaves are raw (E, a, b) arrays)
+    (r"router/w$",                   ("embed", "latent")),
+    (r"experts/w[ig]$",              ("experts", "embed", "moe_ff")),
+    (r"experts/wo$",                 ("experts", "moe_ff", "embed")),
+    # dense / shared-expert SwiGLU MLP
+    (r"(mlp|shared)/w[ig]/w$",       ("embed", "ff")),
+    (r"(mlp|shared)/w[ig]/b$",       ("ff",)),
+    (r"(mlp|shared)/wo/w$",          ("ff", "embed")),
+    (r"(mlp|shared)/wo/b$",          ("embed",)),
+    # mamba mixer
+    (r"ssm/w(z|x|B|C|dt)/w$",        ("embed", "inner")),
+    (r"ssm/w(z|x|B|C|dt)/b$",        ("inner",)),
+    (r"ssm/conv_[xBC]/w$",           ("null", "inner")),
+    (r"ssm/conv_[xBC]/b$",           ("inner",)),
+    (r"ssm/(A_log|D|dt_bias)$",      ("null",)),
+    (r"ssm/out_proj/w$",             ("inner", "embed")),
+    (r"ssm/out_proj/b$",             ("embed",)),
+]
+_AXIS_TABLE = [(re.compile(pat), ax) for pat, ax in _AXIS_TABLE]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def logical_axes(tree) -> Any:
+    """Map every param leaf to a tuple of logical axis names (same tree
+    structure).  Raises KeyError on any unmatched path — the coverage
+    guarantee test_sharding relies on."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        for pat, trailing in _AXIS_TABLE:
+            if pat.search(p):
+                extra = leaf.ndim - len(trailing)
+                if extra < 0:
+                    raise KeyError(f"{p}: rank {leaf.ndim} < {trailing}")
+                out.append(("layers",) * extra + tuple(trailing))
+                break
+        else:
+            raise KeyError(f"no sharding rule matches param path {p!r}")
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# logical name -> mesh axes per mode
+
+def make_rules(mode: str, multi_pod: bool = False,
+               long_context: bool = False) -> Dict[str, Optional[Tuple]]:
+    rules: Dict[str, Optional[Tuple]] = {
+        "batch": ("pod", "data") if multi_pod else ("data",),
+        "seq": None,
+        "kv_len": None,
+        "layers": None,
+        "null": None,
+        "embed": ("data",),       # FSDP
+        "heads": ("model",),      # TP
+        "ff": ("model",),
+        "inner": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),    # EP
+        "moe_ff": None,
+        "latent": None,
+    }
+    if mode == "decode" and long_context:
+        # sequence parallelism: the KV length axis takes the data axis,
+        # batch (typically 1) is replicated
+        rules["batch"] = None
+        rules["kv_len"] = ("data",)
+    return rules
+
+
+def _entry(mesh_axes):
+    """Rules store mesh axes as tuples; PartitionSpec equality is not
+    tuple-insensitive (P('data') != P(('data',))), so unwrap singletons."""
+    if mesh_axes is None:
+        return None
+    if isinstance(mesh_axes, tuple) and len(mesh_axes) == 1:
+        return mesh_axes[0]
+    return mesh_axes
+
+
+def _spec_of(axis_names, rules) -> P:
+    return P(*[_entry(rules.get(a)) for a in axis_names])
+
+
+def param_specs(shapes, rules) -> Any:
+    """PartitionSpec tree for a param (shape) tree under the given rules."""
+    axes = logical_axes(shapes)
+    return jax.tree.map(lambda ax: _spec_of(ax, rules), axes,
+                        is_leaf=lambda a: isinstance(a, tuple))
+
+
+def opt_specs(pspecs) -> Dict[str, Any]:
+    """AdamW state mirrors params three ways (master/m/v)."""
+    return {"master": pspecs, "m": pspecs, "v": pspecs}
+
+
+def batch_specs(batch_shapes: Dict[str, Any], rules) -> Dict[str, Any]:
+    """Input-batch specs: batch axis sharded, everything else replicated.
+    positions may be (3, B, S) for M-RoPE — batch axis is dim 1 there."""
+    b = _entry(rules["batch"])
+    out = {}
+    for k, v in batch_shapes.items():
+        if k == "positions" and v.ndim == 3:
+            out[k] = P(None, b, None)
+        else:
+            out[k] = P(b, *([None] * (v.ndim - 1)))
+    return out
+
+
+def cache_specs(cache_shapes, cfg, rules) -> Any:
+    """Decode-cache specs: (layers, batch, length, ...) leaves.  Dim 2
+    of rank>=4 leaves takes the kv_len rule so long-context decode can
+    sequence-shard KV caches; for SSM conv/state caches that axis is
+    tiny (d_conv-1 / heads) and kv_len is None outside long-context
+    mode, so the approximation only costs GSPMD padding in the
+    long-context dry-run estimates."""
+    b, kl = _entry(rules["batch"]), _entry(rules.get("kv_len"))
+
+    def spec(leaf):
+        if leaf.ndim >= 4:        # (layers, batch, length, heads...) caches
+            return P(None, b, kl, *([None] * (leaf.ndim - 3)))
+        if leaf.ndim >= 2:        # (layers, batch, ...) conv/ssm states
+            return P(None, b, *([None] * (leaf.ndim - 2)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec, cache_shapes,
+                        is_leaf=lambda s: hasattr(s, "ndim"))
+
+
+def named(mesh, tree) -> Any:
+    """PartitionSpec tree -> NamedSharding tree on the given mesh."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda s: isinstance(s, P))

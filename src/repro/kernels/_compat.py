@@ -1,0 +1,9 @@
+"""Pallas API shims across jax versions.
+
+`pltpu.CompilerParams` was `pltpu.TPUCompilerParams` before jax 0.5;
+resolve whichever this jaxlib provides so kernels are version-portable.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams")

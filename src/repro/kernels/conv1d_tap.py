@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _kernel(xs_ref, w_ref, o_ref, acc_ref):
     @pl.when(pl.program_id(2) == 0)
@@ -55,7 +57,7 @@ def conv1d_tap(x, w, b=None, tl=512, td=256, interpret=True):
         out_specs=pl.BlockSpec((tl, td), lambda p, d, k: (p, d)),
         out_shape=jax.ShapeDtypeStruct((P + pp, D + pd), x.dtype),
         scratch_shapes=[pltpu.VMEM((tl, td), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="conv1d_tap",

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref):
     @pl.when(pl.program_id(2) == 0)
@@ -53,7 +55,7 @@ def conv1x1_gemm(x2d, w, tp=256, tm=128, tc=512, interpret=True):
         out_specs=pl.BlockSpec((tp, tm), lambda p, m, c: (p, m)),
         out_shape=jax.ShapeDtypeStruct((P + pp, M + pm), x2d.dtype),
         scratch_shapes=[pltpu.VMEM((tp, tm), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="conv1x1_gemm",

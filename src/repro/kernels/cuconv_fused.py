@@ -15,10 +15,15 @@ Stage 1 dominates cuConv time in the paper (91-99 %); killing the
 temporary stream attacks its memory term directly.
 
 Grid: (N, OH, M_tiles, TAPS).  Per step: one padded input row
-(1, 1, Wp, C) is selected by index_map *element* offset oh + tap_dy
-(legal because the H block dim is 1); the in-row X shift tap_dx is a
-dynamic_slice in VMEM; the (OW x C) window hits the MXU against the
-(C x TM) tap matrix.  Stride 1 (the paper's entire evaluation set).
+(1, 1, Wp, C) is selected by index_map *element* offset oh*sh + tap_dy
+(legal because the H block dim is 1); the in-row X window for tap_dx at
+stride sw is a dynamic_slice of length OW*sw reshaped to (OW, sw, C) and
+column-sampled — a slice+reshape that stays TPU-legal (no gather); the
+(OW x C) window hits the MXU against the (C x TM) tap matrix.
+
+Epilogue (DESIGN.md §4): on the final tap the still-VMEM-resident
+accumulator takes bias add + activation before the single HBM write —
+``relu(conv(x, w) + b)`` costs no extra HBM round trip.
 """
 from __future__ import annotations
 
@@ -27,16 +32,29 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels import _compat
 
 
-def _make_kernel(kw: int, ow: int):
-    def _kernel(x_ref, w_ref, o_ref):
+def _make_kernel(kw: int, ow: int, sw: int, taps: int, activation,
+                 has_bias: bool):
+    def _kernel(*refs):
+        if has_bias:
+            x_ref, w_ref, b_ref, o_ref = refs
+        else:
+            x_ref, w_ref, o_ref = refs
         t = pl.program_id(3)
         dj = jax.lax.rem(t, kw)
-        row = x_ref[0, 0]                                   # (Wp, C)
-        win = jax.lax.dynamic_slice(
-            row, (dj, 0), (ow, row.shape[1]))               # (OW, C)
+        row = x_ref[0, 0]                                   # (Wp', C)
+        if sw == 1:
+            win = jax.lax.dynamic_slice(
+                row, (dj, 0), (ow, row.shape[1]))           # (OW, C)
+        else:
+            # strided window: contiguous (OW*sw, C) slice, column-sampled
+            # via reshape — the padded input guarantees dj + OW*sw <= Wp'
+            win = jax.lax.dynamic_slice(
+                row, (dj, 0), (ow * sw, row.shape[1]))
+            win = win.reshape(ow, sw, row.shape[1])[:, 0, :]
         part = jnp.dot(win, w_ref[0, 0],
                        preferred_element_type=jnp.float32)  # (OW, TM)
 
@@ -48,57 +66,85 @@ def _make_kernel(kw: int, ow: int):
         def _acc():
             o_ref[0, 0] += part
 
+        if has_bias or activation is not None:
+            @pl.when(t == taps - 1)
+            def _epilogue():
+                acc = o_ref[0, 0]
+                if has_bias:
+                    acc = acc + b_ref[0].astype(jnp.float32)
+                if activation == "relu":
+                    acc = jnp.maximum(acc, 0.0)
+                o_ref[0, 0] = acc
+
     return _kernel
 
 
-@functools.partial(jax.jit, static_argnames=("padding", "tm", "interpret"))
-def cuconv_fused(x, w, padding=(0, 0), tm=128, interpret=True):
-    """x: (N, H, W, C) NHWC; w: (KH, KW, C, M) HWIO; stride 1.
+@functools.partial(jax.jit, static_argnames=("stride", "padding",
+                                             "activation", "tm", "interpret"))
+def cuconv_fused(x, w, bias=None, stride=(1, 1), padding=(0, 0),
+                 activation=None, tm=128, interpret=True):
+    """x: (N, H, W, C) NHWC; w: (KH, KW, C, M) HWIO; stride (sh, sw) >= 1.
 
+    bias: optional (M,) added on the final tap; activation: None | 'relu',
+    applied after bias — both fused in VMEM before the output write.
     Returns (N, OH, OW, M) in x.dtype.
     """
     N, H, W, C = x.shape
     KH, KW, _, M = w.shape
+    sh, sw = stride
     ph, pw = padding
-    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
     Hp, Wp = H + 2 * ph, W + 2 * pw
-    OH, OW = Hp - KH + 1, Wp - KW + 1
+    OH, OW = (Hp - KH) // sh + 1, (Wp - KW) // sw + 1
+    # widen rows so every tap's strided window slice stays in bounds:
+    # max start KW-1 plus slice length OW*sw (== Wp when sw == 1)
+    Wpad = KW - 1 + OW * sw
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw + max(0, Wpad - Wp)), (0, 0)))
+    Wp = xp.shape[2]
     tm = min(tm, M)
     pm = (-M) % tm
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pm)))
+    has_bias = bias is not None
     grid = (N, OH, (M + pm) // tm, KH * KW)
+    in_specs = [
+        # one padded input row; H-dim block=1 => element-level shift
+        pl.BlockSpec((1, 1, Wp, C),
+                     lambda n, oh, m, t: (n, oh * sh + t // KW, 0, 0)),
+        # the tap matrix F[di, dj] (C x TM), pinned in VMEM
+        pl.BlockSpec((1, 1, C, tm),
+                     lambda n, oh, m, t: (t // KW, jax.lax.rem(t, KW),
+                                          0, m)),
+    ]
+    operands = [xp, wp]
+    if has_bias:
+        bp = jnp.pad(bias.reshape(1, M), ((0, 0), (0, pm)))
+        in_specs.append(pl.BlockSpec((1, tm), lambda n, oh, m, t: (0, m)))
+        operands.append(bp)
     out = pl.pallas_call(
-        _make_kernel(KW, OW),
+        _make_kernel(KW, OW, sw, KH * KW, activation, has_bias),
         grid=grid,
-        in_specs=[
-            # one padded input row; H-dim block=1 => element-level shift
-            pl.BlockSpec((1, 1, Wp, C),
-                         lambda n, oh, m, t: (n, oh + t // KW, 0, 0)),
-            # the tap matrix F[di, dj] (C x TM), pinned in VMEM
-            pl.BlockSpec((1, 1, C, tm),
-                         lambda n, oh, m, t: (t // KW, jax.lax.rem(t, KW),
-                                              0, m)),
-        ],
+        in_specs=in_specs,
         # output row revisited across all taps (index_map ignores t)
         out_specs=pl.BlockSpec((1, 1, OW, tm),
                                lambda n, oh, m, t: (n, oh, 0, m)),
         out_shape=jax.ShapeDtypeStruct((N, OH, OW, M + pm), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
         name="cuconv_fused",
-    )(xp, wp)
+    )(*operands)
     return out[..., :M].astype(x.dtype)
 
 
-def vmem_bytes(x_shape, w_shape, tm=128, pad=(0, 0)):
+def vmem_bytes(x_shape, w_shape, tm=128, pad=(0, 0), stride=(1, 1),
+               itemsize=4):
     """Static VMEM footprint estimate for the fused kernel's live blocks."""
     N, H, W, C = x_shape
     KH, KW, _, M = w_shape
+    sh, sw = stride
     Wp = W + 2 * pad[1]
-    OW = Wp - KW + 1
-    row = Wp * C * 4
-    wtap = C * min(tm, M) * 4
-    out = OW * min(tm, M) * 4
-    return 2 * (row + wtap) + out        # x2: double buffering of inputs
+    OW = (Wp - KW) // sw + 1
+    row = (KW - 1 + OW * sw) * C * itemsize
+    wtap = C * min(tm, M) * itemsize
+    out = OW * min(tm, M) * 4                # f32 accumulator
+    return 2 * (row + wtap) + out            # x2: double buffering of inputs

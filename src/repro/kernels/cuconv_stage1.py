@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _kernel(xs_ref, w_ref, o_ref, acc_ref):
     @pl.when(pl.program_id(3) == 0)
@@ -59,7 +61,7 @@ def stage1_tap_gemm(xs, w, tp=256, tm=128, tc=512, interpret=True):
         out_specs=pl.BlockSpec((1, tp, tm), lambda t, p, m, c: (t, p, m)),
         out_shape=jax.ShapeDtypeStruct((T, P + pp, M + pm), jnp.float32),
         scratch_shapes=[pltpu.VMEM((tp, tm), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _kernel(t_ref, o_ref):
     o_ref[...] = jnp.sum(t_ref[...].astype(jnp.float32), axis=0).astype(
@@ -37,7 +39,7 @@ def stage2_tap_sum(temps, tp=256, tm=256, out_dtype=jnp.float32,
         in_specs=[pl.BlockSpec((T, tp, tm), lambda p, m: (0, p, m))],
         out_specs=pl.BlockSpec((tp, tm), lambda p, m: (p, m)),
         out_shape=jax.ShapeDtypeStruct((P + pp, M + pm), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="cuconv_stage2",

@@ -15,13 +15,15 @@ from repro.kernels import (conv1x1 as _c1, cuconv_stage1 as _s1,
                            cuconv_stage2 as _s2, cuconv_fused as _cf,
                            conv1d_tap as _c1d, flash_attention as _fa)
 
-_FUSED_VMEM_BUDGET = 12 * 1024 * 1024
-
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"
+
+
+def _norm_stride(stride):
+    return (stride, stride) if isinstance(stride, int) else tuple(stride)
 
 
 def conv1x1(x, w, interpret=None):
@@ -35,14 +37,16 @@ def conv1x1(x, w, interpret=None):
 
 
 def cuconv_two_stage(x, w, padding=(0, 0), interpret=None):
-    """Faithful two-kernel cuConv (stride 1): HBM temporaries + sum."""
+    """Faithful two-kernel cuConv (stride 1): HBM temporaries + sum.
+
+    Policy-free executor: which inputs take this path (vs the fused or
+    1x1 kernels) is decided by core.convspec.plan, not here.
+    """
     from repro.core.cuconv import _tap_views  # shared view builder
     interp = _auto_interpret(interpret)
     N, H, W_, C = x.shape
     KH, KW, _, M = w.shape
     ph, pw = padding
-    if KH == 1 and KW == 1:
-        return conv1x1(x, w, interpret=interp)
     xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
     OH, OW = H + 2 * ph - KH + 1, W_ + 2 * pw - KW + 1
     views = _tap_views(xp, KH, KW, OH, OW, 1)
@@ -53,16 +57,18 @@ def cuconv_two_stage(x, w, padding=(0, 0), interpret=None):
     return out.reshape(N, OH, OW, M).astype(x.dtype)
 
 
-def cuconv_fused(x, w, padding=(0, 0), interpret=None):
-    """Single-kernel fused cuConv (stride 1)."""
-    interp = _auto_interpret(interpret)
-    KH, KW, C, M = w.shape
-    if KH == 1 and KW == 1:
-        return conv1x1(x, w, interpret=interp)
-    if _cf.vmem_bytes(x.shape, w.shape, pad=padding) > _FUSED_VMEM_BUDGET:
-        # working row too large for VMEM: fall back to the two-stage path
-        return cuconv_two_stage(x, w, padding, interpret=interp)
-    return _cf.cuconv_fused(x, w, padding, interpret=interp)
+def cuconv_fused(x, w, padding=(0, 0), stride=1, bias=None, activation=None,
+                 interpret=None):
+    """Single-kernel fused cuConv, any stride >= 1, optional fused
+    bias+activation epilogue.
+
+    Policy-free executor: VMEM-budget fallback and algorithm choice live
+    in core.convspec.plan — calling this directly always runs the fused
+    kernel.
+    """
+    return _cf.cuconv_fused(x, w, bias, stride=_norm_stride(stride),
+                            padding=tuple(padding), activation=activation,
+                            interpret=_auto_interpret(interpret))
 
 
 def conv1d_causal(x, w, b=None, interpret=None):

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cuconv
-from repro.core.autotune import select_algorithm
 
 
 def init_conv(key, kh, kw, c_in, c_out, dtype=jnp.float32):
@@ -28,8 +27,11 @@ def init_conv(key, kh, kw, c_in, c_out, dtype=jnp.float32):
 
 
 def conv_block(p, x, stride=1, padding="same", algorithm="auto"):
-    y = cuconv.conv2d(x, p["w"], stride, padding, algorithm)
-    return jax.nn.relu(y + p["b"])
+    # bias+ReLU ride the conv as a planned epilogue: fused in VMEM on the
+    # Pallas path, plain XLA ops elsewhere — never a separate HBM pass
+    # materialized by this layer (DESIGN.md §4)
+    return cuconv.conv2d(x, p["w"], stride, padding, algorithm,
+                         bias=p["b"], activation="relu")
 
 
 def maxpool(x, k=2, s=2):

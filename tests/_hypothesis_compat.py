@@ -1,0 +1,78 @@
+"""Minimal deterministic stand-in for the hypothesis API subset we use.
+
+CI images without hypothesis (no network installs) fall back to this:
+`given` draws `max_examples` pseudo-random examples from a fixed seed, so
+runs are reproducible; `assume` skips an example without counting it.
+Only the strategies this suite uses are provided (integers, sampled_from,
+tuples).
+"""
+from __future__ import annotations
+
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(lo, hi):
+    return _Strategy(lambda r: r.randint(lo, hi))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda r: r.choice(seq))
+
+
+def tuples(*ss):
+    return _Strategy(lambda r: tuple(s.draw(r) for s in ss))
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, sampled_from=sampled_from, tuples=tuples)
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(cond):
+    if not cond:
+        raise _Unsatisfied()
+
+
+def settings(max_examples=100, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*ss):
+    def deco(fn):
+        # no functools.wraps: pytest must see a zero-arg function, not
+        # the wrapped signature (it would demand fixtures for each param)
+        def wrapper():
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", 30))
+            r = random.Random(0)
+            ran = 0
+            for _ in range(n * 20):
+                if ran >= n:
+                    break
+                vals = tuple(s.draw(r) for s in ss)
+                try:
+                    fn(*vals)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            if ran == 0:                 # mirror hypothesis.Unsatisfiable
+                raise RuntimeError(
+                    f"{fn.__name__}: no examples satisfied assume()")
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -167,7 +167,9 @@ mesh = jax.make_mesh((4,), ("pod",))
 x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 64)), jnp.float32)
 err0 = jnp.zeros((4, 64), jnp.float32)
 
-@partial(jax.shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
+from jax.experimental.shard_map import shard_map
+
+@partial(shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
          out_specs=(P("pod"), P("pod")))
 def f(xs, es):
     out, new_e = C.compressed_psum(xs[0], "pod", es[0])

@@ -1,0 +1,209 @@
+"""ConvSpec plan layer: dispatch, epilogues, strides, fallbacks, cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cuconv as cc
+from repro.core import convspec as cs
+
+TOLS = {"float32": dict(rtol=3e-4, atol=3e-4),
+        "bfloat16": dict(rtol=3e-2, atol=3e-2)}
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_autotune_cache(tmp_path, monkeypatch):
+    """plan() consults the persisted measured cache; point it at an
+    empty per-test dir so earlier sweeps on this machine can't leak
+    into heuristic assertions."""
+    from repro.core import autotune
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "autotune"))
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+def _mk(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32).astype(dtype)
+
+
+def _lax_ref(x, w, stride, padding, bias=None, relu=False):
+    y = cc.conv_lax(x.astype(jnp.float32), w.astype(jnp.float32),
+                    stride, padding)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if relu:
+        y = jax.nn.relu(y)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# dispatch equivalence sweep: every algorithm x stride x padding x dtype x K
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("K", [1, 3, 5])
+@pytest.mark.parametrize("padding", ["same", "valid", 1])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_all_algorithms_match_lax(rng, stride, padding, K, dtype):
+    x = _mk(rng, (2, 10, 10, 6), dtype)
+    w = _mk(rng, (K, K, 6, 5), dtype)
+    want = _lax_ref(x, w, stride, padding)
+    tols = TOLS[str(jnp.dtype(dtype))]
+    spec = cs.ConvSpec.for_conv(x, w, stride, padding)
+    for name in ["im2col", "cuconv_two_stage", "cuconv_two_stage_pallas",
+                 "conv1x1_pallas", "cuconv", "cuconv_pallas", "winograd",
+                 "lax"]:
+        if not cs.supports(name, spec)[0]:
+            continue       # forcing would fall back: lax==lax proves nothing
+        got = cc.conv2d(x, w, stride, padding, algorithm=name)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want),
+            err_msg=f"{name} stride={stride} pad={padding} K={K}", **tols)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_fused_epilogue_matches_lax(rng, stride, dtype):
+    """The planned bias+ReLU epilogue (fused on the Pallas path, XLA ops
+    elsewhere) equals relu(conv_lax + b) for every algorithm."""
+    x = _mk(rng, (1, 9, 9, 8), dtype)
+    w = _mk(rng, (3, 3, 8, 4), dtype)
+    b = _mk(rng, (4,), dtype)
+    want = _lax_ref(x, w, stride, "same", bias=b, relu=True)
+    tols = TOLS[str(jnp.dtype(dtype))]
+    for name in ["auto", "cuconv", "cuconv_pallas", "lax"]:
+        got = cc.conv2d(x, w, stride, "same", algorithm=name,
+                        bias=b, activation="relu")
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want),
+            err_msg=f"{name} stride={stride}", **tols)
+
+
+# ---------------------------------------------------------------------------
+# plan() policy
+
+def test_auto_routes_through_plan():
+    spec = cs.ConvSpec((1, 7, 7, 32), (1, 1, 32, 16))
+    p = cs.plan(spec)
+    assert p.source in ("heuristic", "measured")
+    assert p.algorithm in cc.ALGORITHMS
+    assert p.algorithm in p.explain() and spec.key() in p.explain()
+
+
+def test_plan_respects_vmem_budget_fallback():
+    """Oversized fused working sets take the two-stage path (the guard
+    that used to live in kernels/ops.py)."""
+    spec = cs.ConvSpec((1, 8, 2100, 1024), (3, 3, 1024, 8),
+                       stride=(1, 1), padding=(1, 1))
+    assert cs.fused_vmem_bytes(spec) > cs.FUSED_VMEM_BUDGET
+    p = cs.plan(spec, force="cuconv_pallas")
+    assert p.algorithm == "cuconv_two_stage_pallas"
+    assert p.source == "fallback"
+    assert "VMEM" in p.explain()
+    # strided oversized specs cannot take the stride-1 two-stage kernels
+    sspec = cs.ConvSpec((1, 8, 4100, 1024), (3, 3, 1024, 8),
+                        stride=(2, 2), padding=(1, 1))
+    sp = cs.plan(sspec, force="cuconv_pallas")
+    assert sp.algorithm == "cuconv"
+
+
+def test_plan_fallback_is_numerically_correct(rng):
+    """A fallback plan still computes the right answer."""
+    x = _mk(rng, (1, 6, 300, 64), jnp.float32)
+    w = _mk(rng, (3, 3, 64, 4), jnp.float32)
+    spec = cs.ConvSpec.for_conv(x, w, 1, "same")
+    old = cs.FUSED_VMEM_BUDGET
+    try:
+        cs.FUSED_VMEM_BUDGET = 1024            # force the guard to trip
+        p = cs.plan(spec, force="cuconv_pallas")
+        assert p.source == "fallback"
+        got = p(x, w)
+    finally:
+        cs.FUSED_VMEM_BUDGET = old
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_lax_ref(x, w, 1, "same")),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_forced_unknown_algorithm_raises():
+    spec = cs.ConvSpec((1, 4, 4, 2), (1, 1, 2, 2))
+    with pytest.raises(KeyError):
+        cs.plan(spec, force="conv9000")
+
+
+def test_spec_key_stable_and_epilogue_sensitive():
+    a = cs.ConvSpec((1, 7, 7, 8), (3, 3, 8, 4), (2, 2), (1, 1),
+                    "float32", "bias_relu")
+    assert a.key() == "n1h7w7c8-k3x3m4-s2x2-p1x1-float32-bias_relu"
+    b = cs.ConvSpec((1, 7, 7, 8), (3, 3, 8, 4), (2, 2), (1, 1))
+    assert a.key() != b.key()
+    assert a.out_shape == (1, 4, 4, 4)
+
+
+def test_heuristic_regions_via_plan():
+    """The paper's regions, now owned by plan() (CPU backend)."""
+    mk = lambda xs, ws, s: cs.plan(cs.ConvSpec(xs, ws, (s, s))).algorithm
+    assert mk((1, 7, 7, 832), (1, 1, 832, 256), 1) == "cuconv"
+    assert mk((64, 56, 56, 128), (3, 3, 128, 128), 1) == "winograd"
+    assert mk((1, 7, 7, 64), (3, 3, 64, 64), 2) == "lax"
+
+
+def test_tpu_backend_prefers_fused_kernel():
+    spec = cs.ConvSpec((1, 7, 7, 192), (3, 3, 192, 384), (2, 2), (1, 1))
+    p = cs.plan(spec, backend="tpu")
+    assert p.algorithm == "cuconv_pallas"
+    # bare 1x1 takes the dedicated GEMM kernel; with an epilogue the
+    # fused kernel wins (epilogue applied in VMEM, no extra round trip)
+    one = cs.ConvSpec((1, 7, 7, 832), (1, 1, 832, 256))
+    assert cs.plan(one, backend="tpu").algorithm == "conv1x1_pallas"
+    one_epi = cs.ConvSpec((1, 7, 7, 832), (1, 1, 832, 256),
+                          epilogue="bias_relu")
+    assert cs.plan(one_epi, backend="tpu").algorithm == "cuconv_pallas"
+
+
+# ---------------------------------------------------------------------------
+# persisted measured cache
+
+def test_measured_cache_persists_across_reload(rng, tmp_path, monkeypatch):
+    from repro.core import autotune
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    autotune.clear_cache()
+    x = _mk(rng, (1, 6, 6, 8), jnp.float32)
+    w = _mk(rng, (1, 1, 8, 4), jnp.float32)
+    best = autotune.measure_algorithm(x, w, repeats=1,
+                                      candidates=("lax", "cuconv"))
+    assert best in ("lax", "cuconv")
+    assert (tmp_path / "autotune.json").exists()
+    # a fresh process (simulated by dropping the in-memory mirror) reads
+    # the measured winner back and plan() serves it
+    autotune.clear_cache()
+    spec = cs.ConvSpec.for_conv(x, w, 1, "same")
+    assert autotune.cached_best(spec) == best
+    p = cs.plan(spec)
+    assert p.source == "measured" and p.algorithm == best
+
+
+def test_measured_winner_serves_epilogue_specs(rng, tmp_path, monkeypatch):
+    """A sweep measured without an epilogue must pay off for the real
+    model path, whose specs carry bias_relu (cache key is
+    epilogue-insensitive)."""
+    from repro.core import autotune
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    autotune.clear_cache()
+    x = _mk(rng, (1, 6, 6, 8), jnp.float32)
+    w = _mk(rng, (3, 3, 8, 4), jnp.float32)
+    best = autotune.measure_algorithm(x, w, repeats=1,
+                                      candidates=("lax", "cuconv"))
+    spec = cs.ConvSpec.for_conv(x, w, 1, "same", bias=jnp.zeros((4,)),
+                                activation="relu")
+    p = cs.plan(spec)
+    assert p.source == "measured" and p.algorithm == best
+
+
+def test_measured_cache_ignored_for_other_spec(rng, tmp_path, monkeypatch):
+    from repro.core import autotune
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    autotune.clear_cache()
+    spec = cs.ConvSpec((1, 5, 5, 4), (3, 3, 4, 4))
+    assert autotune.cached_best(spec) is None
+    assert cs.plan(spec).source == "heuristic"

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import assume, given, settings, strategies as st
+try:
+    from hypothesis import assume, given, settings, strategies as st
+except ImportError:   # deterministic fallback; see _hypothesis_compat
+    from _hypothesis_compat import assume, given, settings, strategies as st
 
 from repro.core import cuconv as cc
 from repro.kernels import ref

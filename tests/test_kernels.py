@@ -122,13 +122,35 @@ def test_flash_attention_gqa_wrapper(rng):
                                rtol=2e-5, atol=2e-5)
 
 
-def test_fused_vmem_budget_fallback(rng):
-    """Oversized rows must fall back to the two-stage path, still correct."""
-    x = _rand(rng, (1, 8, 2100, 1024), jnp.float32)  # row ~8.6MB*2 > budget
-    w = _rand(rng, (3, 3, 1024, 8), jnp.float32)
-    from repro.kernels.cuconv_fused import vmem_bytes
-    assert vmem_bytes(x.shape, w.shape, pad=(1, 1)) > 12 * 2**20
-    got = ops.cuconv_fused(x, w, (1, 1), interpret=True)
-    want = ref.conv2d_pad_ref(x, w, (1, 1))
+@pytest.mark.parametrize("stride", [(2, 2), (2, 1), (3, 2)])
+@pytest.mark.parametrize("N,H,W,C,KH,KW,M,pad", [
+    (1, 9, 9, 8, 3, 3, 6, 1),
+    (2, 11, 13, 4, 5, 5, 3, 2),
+])
+def test_cuconv_fused_strided(rng, N, H, W, C, KH, KW, M, pad, stride):
+    """The generalized kernel matches the library conv at any stride."""
+    x = _rand(rng, (N, H, W, C), jnp.float32)
+    w = _rand(rng, (KH, KW, C, M), jnp.float32)
+    got = ops.cuconv_fused(x, w, (pad, pad), stride=stride, interpret=True)
+    want = jax.lax.conv_general_dilated(
+        x, w, stride, ((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=2e-4, atol=2e-4)
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("KH,KW", [(1, 1), (3, 3)])
+def test_cuconv_fused_epilogue(rng, KH, KW, stride):
+    """bias+ReLU accumulated in VMEM on the final tap == relu(conv + b)."""
+    x = _rand(rng, (2, 8, 8, 8), jnp.float32)
+    w = _rand(rng, (KH, KW, 8, 12), jnp.float32)
+    b = _rand(rng, (12,), jnp.float32)
+    pad = (KH - 1) // 2
+    got = ops.cuconv_fused(x, w, (pad, pad), stride=stride, bias=b,
+                           activation="relu", interpret=True)
+    want = jax.nn.relu(jax.lax.conv_general_dilated(
+        x, w, (stride, stride), ((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

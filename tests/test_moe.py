@@ -4,7 +4,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic fallback; see _hypothesis_compat
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.base import get_config, smoke_variant
 from repro.nn import moe as M
