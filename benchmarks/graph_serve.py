@@ -1,0 +1,62 @@
+"""Graph-planned CNN inference benchmark (the deployment story).
+
+Plans the SqueezeNet-flavoured stack ONCE per batch bucket through the
+graph API, reports the one-sweep warmup cost and the steady-state
+per-image latency of each bucketed program, and drives a mixed-size
+request stream through the batch-bucketed CnnServeEngine — the number
+the ROADMAP north-star cares about (planned programs serving traffic),
+alongside the per-layer plan table the per-call benchmarks print.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.models.cnn import squeezenet_like
+from repro.serve.cnn import CnnServeEngine, ImageRequest
+
+HW, C = 32, 3
+
+
+def run(quick=True):
+    rng = np.random.default_rng(0)
+    rows = ["# graph_serve: one planned program per batch bucket "
+            "(squeezenet-like stack, 32x32x3)"]
+    model = squeezenet_like()
+    params = model.init(jax.random.PRNGKey(0))
+    buckets = (1, 4) if quick else (1, 4, 16)
+
+    for b in buckets:
+        gp = model.graph_plan((b, HW, HW, C))
+        stats = gp.warmup()
+        algos = ",".join(sorted({r["algorithm"] for r in stats["nodes"]}))
+        rows.append(csv_row(f"graph/warmup_b{b}", stats["total_ms"] * 1e3,
+                            f"nodes={len(stats['nodes'])} source={gp.source} "
+                            f"algos={algos}"))
+        fn = jax.jit(lambda p, x, gp=gp: model.apply(p, x, graph_plan=gp))
+        x = jnp.asarray(rng.normal(size=(b, HW, HW, C)), jnp.float32)
+        us = time_fn(fn, params, x, repeats=3, warmup=1)
+        rows.append(csv_row(f"graph/steady_b{b}", us,
+                            f"per_image_us={us / b:.1f}"))
+
+    eng = CnnServeEngine(model, params, (HW, HW, C), buckets=buckets)
+    eng.warmup()
+    sizes = ([1, 3, 2, 5, 1] if quick
+             else [1, 3, 2, 5, 1, 16, 7, 4, 2, 9])
+    for i, n in enumerate(sizes):
+        eng.submit(ImageRequest(rid=i, images=rng.normal(
+            size=(n, HW, HW, C)).astype(np.float32)))
+    import time as _t
+    t0 = _t.perf_counter()
+    eng.run()
+    total_us = (_t.perf_counter() - t0) * 1e6
+    used = {b: n for b, n in eng.stats["batches"].items() if n}
+    rows.append(csv_row(
+        "graph/serve_stream", total_us,
+        f"images={eng.stats['images']} batches={sum(used.values())} "
+        f"buckets_used={len(used)}/{len(eng.buckets)} "
+        f"padded={eng.stats['padded_slots']} "
+        f"per_image_us={total_us / max(eng.stats['images'], 1):.1f}"))
+    return rows

@@ -1,9 +1,10 @@
-"""End-to-end CNN inference with per-layer algorithm selection.
+"""End-to-end CNN inference through the graph planning API.
 
 Builds a SqueezeNet-flavoured stack (1x1-heavy: the paper's best region),
-runs batched inference with (a) the library convolution everywhere and
-(b) cuDNN-style per-layer auto-selection over the cuConv family, and
-reports agreement + per-layer choices.
+plans the WHOLE network once as a GraphPlan (per-layer explain table,
+one warmup sweep), compares the planned program against the library
+convolution, and serves a mixed-size request stream through the
+batch-bucketed CnnServeEngine.
 
   PYTHONPATH=src python examples/cnn_inference.py
 """
@@ -13,34 +14,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.convspec import ConvSpec, plan
-from repro.models.cnn import SimpleCNN, squeezenet_like
+from repro.models.cnn import squeezenet_like
+from repro.serve.cnn import CnnServeEngine, ImageRequest
 
 model = squeezenet_like()
 params = model.init(jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(1, 64, 64, 3)), jnp.float32)
 
-print("per-layer conv plans (input 64x64x3, batch 1, fused bias+ReLU):")
-h, c = 64, 3
-for i, (kh, kw, co, s) in enumerate(model.spec):
-    spec = ConvSpec((1, h, h, c), (kh, kw, c, co), (s, s),
-                    ((kh - 1) // 2, (kw - 1) // 2), "float32", "bias_relu")
-    p = plan(spec)
-    print(f"  layer {i:2d}  {kh}x{kw} {c:4d}->{co:4d} stride {s}:  "
-          f"{p.algorithm:8s} [{p.source}] {p.reason}")
-    h, c = h // s, co
+# one planned program for the whole network (resolved once, persisted
+# in the graph-level cache keyed by signature + backend)
+gp = model.graph_plan((1, 64, 64, 3))
+print(gp.explain())
+stats = gp.warmup()
+print(f"warmup: compiled {len(stats['nodes'])} nodes "
+      f"in {stats['total_ms']:.0f} ms\n")
 
 lib = jax.jit(lambda p, x: model.apply(p, x, algorithm="lax"))
-auto = jax.jit(lambda p, x: model.apply(p, x, algorithm="auto"))
+auto = jax.jit(lambda p, x: model.apply(p, x))
 
 y_lib = lib(params, x)
 y_auto = auto(params, x)
 print(f"logits agree: max_err = {float(jnp.abs(y_lib - y_auto).max()):.2e}")
 
-for name, fn in (("library", lib), ("auto-cuconv", auto)):
+for name, fn in (("library", lib), ("graph-planned", auto)):
     fn(params, x).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(5):
         fn(params, x).block_until_ready()
-    print(f"{name:12s}: {(time.perf_counter()-t0)/5*1e3:.2f} ms/inference")
+    print(f"{name:14s}: {(time.perf_counter()-t0)/5*1e3:.2f} ms/inference")
+
+# batch-bucketed serving: mixed-size requests, two compiled programs
+eng = CnnServeEngine(model, params, (64, 64, 3), buckets=(1, 4))
+eng.warmup()
+for i, n in enumerate([1, 3, 2, 1]):
+    eng.submit(ImageRequest(
+        rid=i, images=rng.normal(size=(n, 64, 64, 3)).astype(np.float32)))
+done = eng.run()
+used = {b: n for b, n in eng.stats["batches"].items() if n}
+print(f"served {len(done)} requests / {eng.stats['images']} images in "
+      f"{sum(used.values())} batches (buckets used: {used}, "
+      f"padded slots: {eng.stats['padded_slots']})")

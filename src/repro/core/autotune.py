@@ -12,65 +12,24 @@ convolutional layer"):
     ``(backend, ConvSpec.key())`` in a JSON cache under
     ``$REPRO_CACHE_DIR`` (default ``~/.cache/repro``), so one process's
     measurement sweep pays for every later process.  ``plan()`` consults
-    this cache before falling back to the heuristic.
+    this cache before falling back to the heuristic, and
+    ``graph.GraphPlan.warmup(measure=True)`` sweeps a whole network
+    through it in one pass.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-import json
-import os
 import time
-from pathlib import Path
-from typing import Dict, Optional, Tuple
+from typing import Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.core.convspec import ConvSpec, heuristic_algorithm, supports
+from repro.core.convspec import (ConvPlan, ConvSpec, heuristic_algorithm,
+                                 supports)
+from repro.core.plancache import JsonCache
 
-# in-memory mirror of the persisted JSON: {cache_key: algorithm}
-_CACHE: Dict[str, str] = {}
-_CACHE_PATH: Optional[Path] = None     # path _CACHE was loaded from
-
-
-def _cache_path() -> Path:
-    d = os.environ.get("REPRO_CACHE_DIR",
-                       os.path.join(os.path.expanduser("~"), ".cache",
-                                    "repro"))
-    return Path(d) / "autotune.json"
-
-
-def _ensure_loaded() -> None:
-    global _CACHE, _CACHE_PATH
-    path = _cache_path()
-    if path == _CACHE_PATH:
-        return
-    _CACHE_PATH = path
-    _CACHE = {}
-    try:
-        _CACHE.update(json.loads(path.read_text()))
-    except (OSError, ValueError):
-        pass                            # no/corrupt cache: start empty
-
-
-def _persist() -> None:
-    path = _cache_path()
-    try:
-        path.parent.mkdir(parents=True, exist_ok=True)
-        # merge what concurrent processes persisted since our load, so a
-        # stale snapshot never clobbers their measurements
-        try:
-            merged = json.loads(path.read_text())
-        except (OSError, ValueError):
-            merged = {}
-        merged.update(_CACHE)
-        _CACHE.update(merged)
-        tmp = path.with_suffix(".tmp")
-        tmp.write_text(json.dumps(merged, indent=0, sort_keys=True))
-        os.replace(tmp, path)           # atomic: readers never see a torn file
-    except OSError:
-        pass                            # read-only FS: stay in-memory only
+_STORE = JsonCache("autotune.json")
 
 
 def _key(spec: ConvSpec, backend: str) -> str:
@@ -84,20 +43,16 @@ def _key(spec: ConvSpec, backend: str) -> str:
 
 def cached_best(spec: ConvSpec, backend: Optional[str] = None) -> Optional[str]:
     """Persisted measured winner for this spec on this backend, if any."""
-    _ensure_loaded()
-    return _CACHE.get(_key(spec, backend or jax.default_backend()))
+    return _STORE.get(_key(spec, backend or jax.default_backend()))
 
 
 def record_best(spec: ConvSpec, backend: str, algorithm: str) -> None:
-    _ensure_loaded()
-    _CACHE[_key(spec, backend)] = algorithm
-    _persist()
+    _STORE.put(_key(spec, backend), algorithm)
 
 
 def clear_cache() -> None:
     """Drop the in-memory mirror (tests); the JSON file is untouched."""
-    global _CACHE_PATH
-    _CACHE_PATH = None
+    _STORE.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -112,32 +67,49 @@ def select_algorithm(x_shape, w_shape, stride=1) -> str:
     return heuristic_algorithm(spec, jax.default_backend())[0]
 
 
+def default_candidates(spec: ConvSpec) -> Sequence[str]:
+    """Every registered algorithm that can execute ``spec`` exactly —
+    including the Pallas kernels this repo exists to showcase."""
+    from repro.core.cuconv import ALGORITHMS
+    return tuple(n for n in ALGORITHMS if supports(n, spec)[0])
+
+
 def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
-                      candidates=("lax", "im2col", "winograd",
-                                  "cuconv_two_stage", "cuconv")) -> str:
+                      candidates: Optional[Sequence[str]] = None,
+                      bias=None, activation: Optional[str] = None) -> str:
     """Time every viable candidate (compiled, synced), persist the winner.
 
     The cuDNN-style exhaustive search the paper used for its baselines;
     ``plan()`` serves the recorded winner to every later process.
+
+    ``candidates=None`` means all of ``ALGORITHMS`` filtered by
+    ``supports()`` — so the measured mode can pick the Pallas kernels,
+    not just the XLA family.  ``bias``/``activation`` ride into the
+    timed executions, so fused-epilogue paths are measured exactly as
+    they deploy (epilogue in-kernel on the fused Pallas path, XLA ops
+    elsewhere); the persisted key stays epilogue-insensitive.
     """
-    from repro.core.cuconv import ALGORITHMS
-    spec = ConvSpec.for_conv(x, w, stride, padding)
+    spec = ConvSpec.for_conv(x, w, stride, padding, bias=bias,
+                             activation=activation)
     backend = jax.default_backend()
     hit = cached_best(spec, backend)
     if hit is not None:
         return hit
+    if candidates is None:
+        candidates = default_candidates(spec)
     best, best_t = None, float("inf")
     for name in candidates:
         if not supports(name, spec)[0]:
             continue
-        fn = jax.jit(functools.partial(ALGORITHMS[name], stride=stride,
-                                       padding=padding))
+        # time through a ConvPlan so the epilogue runs as deployed
+        p = ConvPlan(spec, name, "candidate", "autotune timing", backend)
+        fn = jax.jit(p)
         try:
-            fn(x, w).block_until_ready()          # compile + warm
+            fn(x, w, bias).block_until_ready()    # compile + warm
             ts = []
             for _ in range(repeats):
                 t0 = time.perf_counter()
-                fn(x, w).block_until_ready()
+                fn(x, w, bias).block_until_ready()
                 ts.append(time.perf_counter() - t0)
             t = float(np.median(ts))
         except Exception:

@@ -37,17 +37,47 @@ EPILOGUES = ("none", "bias", "relu", "bias_relu")
 
 
 def normalize_pad(padding: Pad, kh: int, kw: int) -> Tuple[int, int]:
+    """Canonical (ph, pw) for any accepted padding form.
+
+    The single home of padding normalization (cuconv and the kernels
+    import it from here).  Rejects negative amounts and wrong-length
+    tuples instead of silently truncating or wrapping them.
+    """
     if padding == "same":
         return (kh - 1) // 2, (kw - 1) // 2
     if padding == "valid":
         return 0, 0
     if isinstance(padding, int):
-        return padding, padding
-    return tuple(padding)  # type: ignore[return-value]
+        pad = (padding, padding)
+    else:
+        pad = tuple(padding)
+    if len(pad) != 2:
+        raise ValueError(f"padding must be 'same', 'valid', an int, or a "
+                         f"(ph, pw) pair; got {padding!r}")
+    ph, pw = pad
+    if ph < 0 or pw < 0:
+        raise ValueError(f"padding must be non-negative; got {padding!r}")
+    return ph, pw
 
 
-def _norm_stride(stride) -> Tuple[int, int]:
-    return (stride, stride) if isinstance(stride, int) else tuple(stride)
+def normalize_stride(stride) -> Tuple[int, int]:
+    """Canonical (sh, sw) stride pair (the single home; see normalize_pad)."""
+    s = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    if len(s) != 2:
+        raise ValueError(f"stride must be an int or an (sh, sw) pair; "
+                         f"got {stride!r}")
+    if s[0] < 1 or s[1] < 1:
+        raise ValueError(f"stride must be >= 1; got {stride!r}")
+    return s
+
+
+def out_size(size: int, k: int, p: int, s: int) -> int:
+    """Output extent of one spatial axis: (size + 2p - k) // s + 1."""
+    return (size + 2 * p - k) // s + 1
+
+
+# back-compat alias (pre-graph-API name)
+_norm_stride = normalize_stride
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +96,18 @@ class ConvSpec:
         if self.in_shape[3] != self.filter_shape[2]:
             raise ValueError(f"channel mismatch: input {self.in_shape} "
                              f"vs filter {self.filter_shape}")
+        # direct construction must be as strict as the normalize_* path
+        if len(self.stride) != 2 or any(s < 1 for s in self.stride):
+            raise ValueError(f"stride must be an (sh, sw) pair >= 1; "
+                             f"got {self.stride!r}")
+        if len(self.padding) != 2 or any(p < 0 for p in self.padding):
+            raise ValueError(f"padding must be a non-negative (ph, pw) "
+                             f"pair; got {self.padding!r}")
+        if any(d <= 0 for d in self.out_shape):
+            raise ValueError(f"spec produces non-positive output shape "
+                             f"{self.out_shape}: input {self.in_shape}, "
+                             f"filter {self.filter_shape}, stride "
+                             f"{self.stride}, padding {self.padding}")
 
     @classmethod
     def for_conv(cls, x, w, stride=1, padding: Pad = "same",
@@ -76,7 +118,7 @@ class ConvSpec:
                else "bias" if bias is not None
                else "relu" if activation == "relu" else "none")
         return cls(tuple(map(int, x.shape)), tuple(map(int, w.shape)),
-                   _norm_stride(stride), normalize_pad(padding, kh, kw),
+                   normalize_stride(stride), normalize_pad(padding, kh, kw),
                    str(x.dtype), epi)
 
     # -- derived geometry ------------------------------------------------
@@ -85,8 +127,7 @@ class ConvSpec:
         n, h, w, _ = self.in_shape
         kh, kw, _, m = self.filter_shape
         (sh, sw), (ph, pw) = self.stride, self.padding
-        return (n, (h + 2 * ph - kh) // sh + 1,
-                (w + 2 * pw - kw) // sw + 1, m)
+        return (n, out_size(h, kh, ph, sh), out_size(w, kw, pw, sw), m)
 
     @property
     def is_1x1(self) -> bool:
@@ -190,6 +231,12 @@ def heuristic_algorithm(spec: ConvSpec, backend: str) -> Tuple[str, str]:
 # ---------------------------------------------------------------------------
 # plan
 
+# Observable resolution count: every plan() call increments it, and
+# NOTHING else does.  The graph layer's plan-once contract is asserted
+# against this ("warmup then N inferences adds zero resolutions").
+PLAN_STATS = {"resolutions": 0}
+
+
 @dataclasses.dataclass(frozen=True)
 class ConvPlan:
     """Executable algorithm choice for one ConvSpec."""
@@ -241,6 +288,7 @@ def plan(spec: ConvSpec, force: Optional[str] = None,
     old ops.py VMEM check did) > persisted measured-autotune winner >
     paper-region heuristic.
     """
+    PLAN_STATS["resolutions"] += 1
     backend = backend or jax.default_backend()
 
     if force is not None:

@@ -35,21 +35,12 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.convspec import normalize_pad as _norm_pad_kk
+# geometry helpers have ONE home: core.convspec (aliased here for brevity)
+from repro.core.convspec import (normalize_pad as _norm_pad,
+                                 normalize_stride as _norm_stride,
+                                 out_size as _out_size)
 
 Pad = Union[int, Tuple[int, int], str]
-
-
-def _norm_pad(padding: Pad, kh: int, kw: int) -> Tuple[int, int]:
-    return _norm_pad_kk(padding, kh, kw)
-
-
-def _norm_stride(stride) -> Tuple[int, int]:
-    return (stride, stride) if isinstance(stride, int) else tuple(stride)
-
-
-def _out_size(h, kh, ph, s):
-    return (h + 2 * ph - kh) // s + 1
 
 
 def _pad_input(x, ph, pw):

@@ -1,0 +1,270 @@
+"""Graph plan layer: plan a whole network once, serve it as a program.
+
+The per-call ``conv2d`` path builds a ConvSpec and resolves a plan at
+every call site, so nothing ever sees the network as a whole.  cuDNN
+moved from per-call descriptors to a graph API for exactly this reason;
+this module is that seam for the repo (DESIGN.md §5):
+
+  ConvGraph   ordered chain of ConvSpec nodes — the conv skeleton of a
+              network, derived from a model layer list + input geometry.
+              ``signature()`` is its stable identity (the cache key).
+  GraphPlan   per-node ConvPlans resolved ONCE, with a single
+              ``explain()`` table for the whole network, a ``warmup()``
+              that compiles (and optionally measure-autotunes) every
+              node in one sweep, and ``run()`` to execute the chain.
+  plan_graph  resolves a GraphPlan, consulting a persisted graph-level
+              cache (``$REPRO_CACHE_DIR/graphplans.json``, next to
+              ``autotune.json``) keyed by backend + graph signature —
+              a warm process constructs the whole program with ZERO
+              per-node plan() resolutions.
+
+``models.cnn.SimpleCNN`` builds on this (one pre-resolved program per
+input geometry instead of re-planning inside every conv block), and
+``serve.cnn.CnnServeEngine`` multiplexes request streams onto a small
+set of batch-bucketed GraphPlan programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.convspec import (ConvPlan, ConvSpec, normalize_pad,
+                                 normalize_stride, plan, supports)
+from repro.core.plancache import JsonCache
+
+LayerSpec = Tuple[int, int, int, int]          # (kh, kw, c_out, stride)
+
+# graph-level plan cache: {f"{backend}/{signature}": {"algorithms": [...]}}
+_STORE = JsonCache("graphplans.json")
+
+
+def clear_cache() -> None:
+    """Drop the in-memory mirror (tests); the JSON file is untouched."""
+    _STORE.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGraph:
+    """Ordered chain of ConvSpec nodes: the conv skeleton of a network."""
+    nodes: Tuple[ConvSpec, ...]
+
+    def __post_init__(self):
+        if not self.nodes:
+            raise ValueError("ConvGraph needs at least one node")
+        for a, b in zip(self.nodes, self.nodes[1:]):
+            if a.out_shape != b.in_shape:
+                raise ValueError(f"graph chain broken: {a.key()} produces "
+                                 f"{a.out_shape} but next node consumes "
+                                 f"{b.in_shape}")
+
+    @classmethod
+    def chain(cls, layers: Sequence[LayerSpec], in_shape, *,
+              padding="same", dtype: str = "float32",
+              epilogue: str = "bias_relu") -> "ConvGraph":
+        """Derive the spec chain from a layer list + input geometry.
+
+        ``layers`` uses the SimpleCNN convention ``(kh, kw, c_out,
+        stride)``; each node's output geometry feeds the next node.
+        """
+        n, h, w, c = map(int, in_shape)
+        nodes: List[ConvSpec] = []
+        for kh, kw, co, s in layers:
+            spec = ConvSpec((n, h, w, c), (kh, kw, c, co),
+                            normalize_stride(s), normalize_pad(padding, kh, kw),
+                            dtype, epilogue)
+            nodes.append(spec)
+            _, h, w, c = spec.out_shape
+        return cls(tuple(nodes))
+
+    @property
+    def in_shape(self) -> Tuple[int, int, int, int]:
+        return self.nodes[0].in_shape
+
+    @property
+    def out_shape(self) -> Tuple[int, int, int, int]:
+        return self.nodes[-1].out_shape
+
+    def signature(self) -> str:
+        """Stable graph identity: the persisted plan cache's key material."""
+        blob = "|".join(s.key() for s in self.nodes)
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+
+@dataclasses.dataclass
+class GraphPlan:
+    """Whole-network plan: one resolved ConvPlan per graph node.
+
+    Mutable only through ``warmup(measure=True)``, which may swap node
+    plans for measured winners; execution itself never re-plans.
+    """
+    graph: ConvGraph
+    node_plans: Tuple[ConvPlan, ...]
+    backend: str
+    source: str                  # resolved | graph_cache | forced
+    # per-node jitted executables, shared by warmup() and run() so the
+    # warmup compile sweep is the same program inference reuses
+    _jitted: Dict[int, Callable] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def _node_fn(self, i: int) -> Callable:
+        fn = self._jitted.get(i)
+        if fn is None:
+            fn = jax.jit(self.node_plans[i])
+            self._jitted[i] = fn
+        return fn
+
+    def explain(self) -> str:
+        """One aligned table for the whole network."""
+        lines = [f"GraphPlan[{self.source}] backend={self.backend} "
+                 f"sig={self.graph.signature()} nodes={len(self.graph)}"]
+        for i, p in enumerate(self.node_plans):
+            s = p.spec
+            n, h, w, c = s.in_shape
+            kh, kw, _, m = s.filter_shape
+            lines.append(
+                f"  {i:3d}  {h:>3d}x{w:<3d} c{c:<4d} {kh}x{kw}/"
+                f"{s.stride[0]} m{m:<4d} -> {p.algorithm:24s} "
+                f"[{p.source}] {p.reason}")
+        return "\n".join(lines)
+
+    # -- execution -------------------------------------------------------
+    def run(self, x, weights: Sequence):
+        """Execute the conv chain on ``x``.
+
+        ``weights``: one ``(w, bias)`` pair (bias may be None for
+        epilogues without bias) per node, in graph order.  No plan()
+        resolution happens here — the program was resolved up front.
+        """
+        if len(weights) != len(self.graph):
+            raise ValueError(f"graph has {len(self.graph)} nodes but got "
+                             f"{len(weights)} weight pairs")
+        for i, (p, (w, b)) in enumerate(zip(self.node_plans, weights)):
+            x = self._node_fn(i)(x, w, b if p.spec.has_bias else None)
+        return x
+
+    # -- warmup / autotune ----------------------------------------------
+    def warmup(self, *, measure: bool = False, repeats: int = 3) -> Dict:
+        """Compile (and optionally measure-autotune) every node, one sweep.
+
+        ``measure=True`` runs the exhaustive per-node timing sweep
+        (``autotune.measure_algorithm`` with the node's epilogue threaded
+        through), re-resolves each node against the freshly persisted
+        winners, and re-persists the graph-level entry — after which the
+        plan serves inference with zero further plan() resolutions.
+
+        Returns ``{"nodes": [...], "total_ms": float}`` with per-node
+        algorithm/source/compile-time rows.
+        """
+        from repro.core import autotune
+        if measure and self.backend != jax.default_backend():
+            # measure_algorithm times on the process's default backend;
+            # recording those numbers under another backend's key would
+            # silently discard the sweep
+            raise ValueError(
+                f"measured warmup must run on the plan's backend: plan is "
+                f"for {self.backend!r} but this process runs "
+                f"{jax.default_backend()!r}")
+        t_start = time.perf_counter()
+        if measure:
+            new_plans: List[ConvPlan] = []
+            for p in self.node_plans:
+                s = p.spec
+                dtype = jnp.dtype(s.dtype)
+                autotune.measure_algorithm(
+                    jnp.zeros(s.in_shape, dtype),
+                    jnp.zeros(s.filter_shape, dtype),
+                    stride=s.stride, padding=s.padding, repeats=repeats,
+                    bias=(jnp.zeros((s.filter_shape[3],), dtype)
+                          if s.has_bias else None),
+                    activation="relu" if s.wants_relu else None)
+                new_plans.append(plan(s, backend=self.backend))  # the winner
+            self.node_plans = tuple(new_plans)
+            self._jitted.clear()        # stale traces must not serve on
+            _persist(self.graph, self.backend, self.node_plans)
+        rows = []
+        for i, p in enumerate(self.node_plans):
+            s = p.spec
+            dtype = jnp.dtype(s.dtype)
+            x = jnp.zeros(s.in_shape, dtype)
+            w = jnp.zeros(s.filter_shape, dtype)
+            b = jnp.zeros((s.filter_shape[3],), dtype) if s.has_bias else None
+            t0 = time.perf_counter()
+            self._node_fn(i)(x, w, b).block_until_ready()
+            rows.append({"key": s.key(), "algorithm": p.algorithm,
+                         "source": p.source,
+                         "compile_ms": (time.perf_counter() - t0) * 1e3})
+        return {"nodes": rows,
+                "total_ms": (time.perf_counter() - t_start) * 1e3}
+
+
+# ---------------------------------------------------------------------------
+# resolution + persisted graph-level cache
+
+def plan_graph(graph: ConvGraph, *, backend: Optional[str] = None,
+               force: Optional[str] = None,
+               use_cache: bool = True) -> GraphPlan:
+    """Resolve a whole-network plan once.
+
+    Forced plans bypass the persisted cache in both directions (they are
+    a debugging/benchmark tool, not a deployment choice).  Otherwise a
+    persisted entry keyed by backend + graph signature reconstructs the
+    program with zero per-node plan() resolutions; entries naming
+    unknown or no-longer-supported algorithms are dropped and re-solved.
+    """
+    backend = backend or jax.default_backend()
+    if force is not None:
+        plans = tuple(plan(s, force=force, backend=backend)
+                      for s in graph.nodes)
+        return GraphPlan(graph, plans, backend, "forced")
+    if use_cache:
+        cached = _plans_from_cache(graph, backend)
+        if cached is not None:
+            return GraphPlan(graph, cached, backend, "graph_cache")
+    plans = tuple(plan(s, backend=backend) for s in graph.nodes)
+    if use_cache:       # use_cache=False means no cache interaction AT ALL
+        _persist(graph, backend, plans)
+    return GraphPlan(graph, plans, backend, "resolved")
+
+
+def _graph_key(graph: ConvGraph, backend: str) -> str:
+    return f"{backend}/{graph.signature()}"
+
+
+def _persist(graph: ConvGraph, backend: str,
+             plans: Sequence[ConvPlan]) -> None:
+    _STORE.put(_graph_key(graph, backend),
+               {"algorithms": [p.algorithm for p in plans]})
+
+
+def _plans_from_cache(graph: ConvGraph,
+                      backend: str) -> Optional[Tuple[ConvPlan, ...]]:
+    from repro.core import autotune
+    from repro.core.cuconv import ALGORITHMS
+    entry = _STORE.get(_graph_key(graph, backend))
+    if not isinstance(entry, dict):
+        return None
+    algos = entry.get("algorithms")
+    if not isinstance(algos, list) or len(algos) != len(graph.nodes):
+        return None
+    plans = []
+    for spec, algo in zip(graph.nodes, algos):
+        if algo not in ALGORITHMS or not supports(algo, spec)[0]:
+            return None                 # stale entry: caller re-resolves
+        # a measured winner recorded since this entry was persisted must
+        # win (plan()'s measured > heuristic precedence survives the
+        # graph layer): treat the entry as stale and re-resolve
+        measured = autotune.cached_best(spec, backend)
+        if (measured is not None and measured != algo
+                and supports(measured, spec)[0]):
+            return None
+        plans.append(ConvPlan(spec, algo, "graph_cache",
+                              "persisted graph-level plan", backend))
+    return tuple(plans)

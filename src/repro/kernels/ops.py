@@ -16,14 +16,13 @@ from repro.kernels import (conv1x1 as _c1, cuconv_stage1 as _s1,
                            conv1d_tap as _c1d, flash_attention as _fa)
 
 
+from repro.core.convspec import normalize_stride as _norm_stride  # one home
+
+
 def _auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"
-
-
-def _norm_stride(stride):
-    return (stride, stride) if isinstance(stride, int) else tuple(stride)
 
 
 def conv1x1(x, w, interpret=None):

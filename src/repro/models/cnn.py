@@ -1,20 +1,24 @@
 """CNN inference graphs over the cuConv core (the paper's own domain).
 
 The paper evaluates standalone convolution configurations drawn from five
-CNNs; this module provides (a) a runnable sequential CNN for the
-end-to-end inference example and (b) per-layer conv execution with the
-cuDNN-style per-layer algorithm selection the paper's deployment story
-relies on.
+CNNs; this module provides a runnable sequential CNN whose conv stack is
+planned as ONE program through the graph layer (core/graph.py): a
+``SimpleCNN`` resolves a ``GraphPlan`` per input geometry exactly once
+(memoized, and persisted across processes via the graph-level cache) and
+every ``apply`` executes that pre-resolved program — no per-call-site
+re-planning inside the conv blocks.  ``conv_block`` remains as the eager
+one-off path for standalone layer experiments.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cuconv
+from repro.core.graph import ConvGraph, GraphPlan, plan_graph
 
 
 def init_conv(key, kh, kw, c_in, c_out, dtype=jnp.float32):
@@ -27,9 +31,9 @@ def init_conv(key, kh, kw, c_in, c_out, dtype=jnp.float32):
 
 
 def conv_block(p, x, stride=1, padding="same", algorithm="auto"):
-    # bias+ReLU ride the conv as a planned epilogue: fused in VMEM on the
-    # Pallas path, plain XLA ops elsewhere — never a separate HBM pass
-    # materialized by this layer (DESIGN.md §4)
+    # eager per-call path: bias+ReLU ride the conv as a planned epilogue
+    # (fused in VMEM on the Pallas path, plain XLA ops elsewhere).  Model
+    # inference goes through the pre-resolved GraphPlan instead.
     return cuconv.conv2d(x, p["w"], stride, padding, algorithm,
                          bias=p["b"], activation="relu")
 
@@ -40,12 +44,17 @@ def maxpool(x, k=2, s=2):
 
 
 class SimpleCNN:
-    """Sequential conv stack + GAP head; spec: [(kh, kw, c_out, stride), ...]."""
+    """Sequential conv stack + GAP head; spec: [(kh, kw, c_out, stride), ...].
+
+    The conv stack is a plannable program: ``graph_plan(in_shape)``
+    resolves (once per geometry/backend) and ``apply`` executes it.
+    """
 
     def __init__(self, spec: Sequence[Tuple[int, int, int, int]],
                  num_classes: int = 10, in_channels: int = 3):
         self.spec, self.num_classes, self.in_channels = (
             tuple(spec), num_classes, in_channels)
+        self._plan_cache: Dict[tuple, GraphPlan] = {}
 
     def init(self, key):
         params: List = []
@@ -58,9 +67,37 @@ class SimpleCNN:
                 / np.sqrt(c))
         return {"convs": params, "head": head}
 
-    def apply(self, params, x, algorithm="auto"):
-        for p, (kh, kw, co, s) in zip(params["convs"], self.spec):
-            x = conv_block(p, x, stride=s, algorithm=algorithm)
+    # -- graph planning --------------------------------------------------
+    def graph(self, in_shape, dtype: str = "float32") -> ConvGraph:
+        """The conv skeleton for one input geometry (bias_relu epilogue —
+        what every conv block of this model computes)."""
+        return ConvGraph.chain(self.spec, in_shape, dtype=dtype)
+
+    def graph_plan(self, in_shape, *, backend: Optional[str] = None,
+                   force: Optional[str] = None,
+                   dtype: str = "float32") -> GraphPlan:
+        """The whole-network plan for one input geometry, resolved once
+        per (geometry, backend, force) and memoized on the model."""
+        backend = backend or jax.default_backend()
+        key = (tuple(map(int, in_shape)), backend, force, dtype)
+        gp = self._plan_cache.get(key)
+        if gp is None:
+            gp = plan_graph(self.graph(in_shape, dtype=dtype),
+                            backend=backend, force=force)
+            self._plan_cache[key] = gp
+        return gp
+
+    # -- execution -------------------------------------------------------
+    def apply(self, params, x, algorithm="auto",
+              graph_plan: Optional[GraphPlan] = None):
+        """Run the planned program.  ``algorithm`` other than "auto"
+        forces that algorithm for every node (capability-guarded);
+        passing ``graph_plan`` skips the memo entirely (serving engines
+        hold their own per-bucket plans)."""
+        gp = graph_plan or self.graph_plan(
+            x.shape, force=None if algorithm == "auto" else algorithm,
+            dtype=str(x.dtype))
+        x = gp.run(x, [(p["w"], p["b"]) for p in params["convs"]])
         x = x.mean(axis=(1, 2))                       # global average pool
         return x @ params["head"]
 

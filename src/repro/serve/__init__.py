@@ -1,1 +1,2 @@
 from repro.serve.engine import ServeEngine, Request  # noqa: F401
+from repro.serve.cnn import CnnServeEngine, ImageRequest  # noqa: F401

@@ -1,0 +1,145 @@
+"""Batch-bucketed CNN serving over graph-planned programs.
+
+The LM engine (serve/engine.py) keeps its compiled surface to two jitted
+functions over fixed shapes; this engine applies the same discipline to
+CNN inference traffic: the ONLY compiled programs are one jitted
+whole-network GraphPlan execution per configured batch *bucket*.
+Incoming image requests (each carrying one image or a small batch) are
+flattened into per-image units and multiplexed onto the largest bucket
+that fits the remaining queue — short remainders ride the smallest
+bucket with zero-padded slots.  Plans are resolved once per bucket (and
+persisted via the graph-level cache), so a warm engine serves any
+request mix with zero plan() resolutions and at most ``len(buckets)``
+compiled shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    rid: int
+    images: np.ndarray                  # (n, H, W, C), or (H, W, C) for one
+    out: Optional[np.ndarray] = None    # (n, num_classes) once served
+    done: bool = False
+
+    def __post_init__(self):
+        self.images = np.asarray(self.images)
+        if self.images.ndim == 3:
+            self.images = self.images[None]
+        if self.images.ndim != 4:
+            raise ValueError(f"images must be (n, H, W, C) or (H, W, C); "
+                             f"got shape {self.images.shape}")
+
+
+class CnnServeEngine:
+    """Serve image-classification traffic through batch-bucketed plans."""
+
+    def __init__(self, model, params, image_shape: Tuple[int, int, int], *,
+                 buckets: Tuple[int, ...] = (1, 4, 8), algorithm="auto",
+                 backend: Optional[str] = None):
+        self.model, self.params = model, params
+        self.image_shape = tuple(map(int, image_shape))     # (H, W, C)
+        self.buckets = tuple(sorted({int(b) for b in buckets}))
+        if not self.buckets or self.buckets[0] < 1:
+            raise ValueError(f"buckets must be positive ints; got {buckets}")
+        self.algorithm = algorithm
+        self.backend = backend or jax.default_backend()
+        self.queue: List[ImageRequest] = []
+        self._fns: Dict[int, Callable] = {}    # bucket -> jitted program
+        self.stats = {"images": 0, "padded_slots": 0,
+                      "batches": {b: 0 for b in self.buckets}}
+
+    # ------------------------------------------------------------------
+    @property
+    def compiled_buckets(self) -> Tuple[int, ...]:
+        """Batch sizes with a built program — never exceeds ``buckets``."""
+        return tuple(sorted(self._fns))
+
+    def _bucket_fn(self, b: int) -> Callable:
+        fn = self._fns.get(b)
+        if fn is None:
+            gp = self.model.graph_plan(
+                (b,) + self.image_shape, backend=self.backend,
+                force=None if self.algorithm == "auto" else self.algorithm)
+            fn = jax.jit(lambda params, xb: self.model.apply(
+                params, xb, graph_plan=gp))
+            self._fns[b] = fn
+        return fn
+
+    def warmup(self, *, measure: bool = False) -> Dict[int, float]:
+        """Resolve + compile every bucket program in one sweep.
+
+        ``measure=True`` first measure-autotunes each bucket's graph
+        (GraphPlan.warmup), so the compiled programs embed the measured
+        winners.  Returns per-bucket compile milliseconds.
+        """
+        H, W, C = self.image_shape
+        out = {}
+        for b in self.buckets:
+            if measure and self.algorithm == "auto":
+                self.model.graph_plan((b, H, W, C), backend=self.backend) \
+                    .warmup(measure=True)
+                # the measured sweep may have swapped node plans: an
+                # already-compiled program would keep serving the stale
+                # trace, so force a rebuild
+                self._fns.pop(b, None)
+            fn = self._bucket_fn(b)
+            x = jnp.zeros((b, H, W, C), jnp.float32)
+            t0 = time.perf_counter()
+            fn(self.params, x).block_until_ready()
+            out[b] = (time.perf_counter() - t0) * 1e3
+        return out
+
+    # ------------------------------------------------------------------
+    def submit(self, req: ImageRequest) -> None:
+        if tuple(req.images.shape[1:]) != self.image_shape:
+            raise ValueError(f"request {req.rid}: image shape "
+                             f"{req.images.shape[1:]} != engine shape "
+                             f"{self.image_shape}")
+        self.queue.append(req)
+
+    def _pick_bucket(self, pending: int) -> int:
+        fits = [b for b in self.buckets if b <= pending]
+        return max(fits) if fits else self.buckets[0]
+
+    def run(self) -> List[ImageRequest]:
+        """Drain the queue; returns the served requests (outputs filled).
+
+        Requests are flattened to per-image units and packed batch by
+        batch: the largest bucket that the remaining unit count fills,
+        else the smallest bucket with padded (zero) slots.
+        """
+        served, units = list(self.queue), []
+        for r in served:
+            units.extend((r, i) for i in range(r.images.shape[0]))
+        cursor = 0
+        while cursor < len(units):
+            b = self._pick_bucket(len(units) - cursor)
+            chunk = units[cursor:cursor + b]
+            xb = np.zeros((b,) + self.image_shape, np.float32)
+            for j, (r, i) in enumerate(chunk):
+                xb[j] = r.images[i]
+            y = np.asarray(self._bucket_fn(b)(self.params, jnp.asarray(xb)))
+            for j, (r, i) in enumerate(chunk):
+                if r.out is None:
+                    r.out = np.zeros((r.images.shape[0], y.shape[-1]),
+                                     y.dtype)
+                r.out[i] = y[j]
+            self.stats["batches"][b] += 1
+            self.stats["padded_slots"] += b - len(chunk)
+            self.stats["images"] += len(chunk)
+            cursor += b
+        # only a fully drained queue is cleared: a failure above leaves
+        # every request submitted (outputs rewrite idempotently on retry)
+        self.queue = []
+        for r in served:
+            r.done = True
+        return served

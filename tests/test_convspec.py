@@ -61,6 +61,28 @@ def test_all_algorithms_match_lax(rng, stride, padding, K, dtype):
             err_msg=f"{name} stride={stride} pad={padding} K={K}", **tols)
 
 
+@pytest.mark.parametrize("epilogue", ["bias", "relu", "bias_relu"])
+@pytest.mark.parametrize("K", [1, 3])
+def test_every_algorithm_matches_lax_for_every_epilogue(rng, K, epilogue):
+    """Every algorithm x epilogue lands on relu?(conv + bias?) exactly
+    (fused in-kernel on the Pallas path, XLA ops elsewhere)."""
+    x = _mk(rng, (1, 8, 8, 6), jnp.float32)
+    w = _mk(rng, (K, K, 6, 4), jnp.float32)
+    bias = _mk(rng, (4,), jnp.float32) if "bias" in epilogue else None
+    act = "relu" if "relu" in epilogue else None
+    want = _lax_ref(x, w, 1, "same", bias=bias, relu=act == "relu")
+    spec = cs.ConvSpec.for_conv(x, w, 1, "same", bias=bias, activation=act)
+    assert spec.epilogue == epilogue
+    for name in cc.ALGORITHMS:
+        if not cs.supports(name, spec)[0]:
+            continue
+        got = cc.conv2d(x, w, 1, "same", algorithm=name, bias=bias,
+                        activation=act)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want),
+            err_msg=f"{name} K={K} epilogue={epilogue}", **TOLS["float32"])
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("stride", [1, 2])
 def test_fused_epilogue_matches_lax(rng, stride, dtype):
@@ -129,6 +151,47 @@ def test_forced_unknown_algorithm_raises():
     spec = cs.ConvSpec((1, 4, 4, 2), (1, 1, 2, 2))
     with pytest.raises(KeyError):
         cs.plan(spec, force="conv9000")
+
+
+def test_forced_unsupported_lands_on_documented_fallbacks():
+    """Every forced-but-unsupported algorithm takes _fallback_for's
+    documented stand-in."""
+    spec3 = cs.ConvSpec((1, 8, 8, 4), (3, 3, 4, 4), (1, 1), (1, 1))
+    p = cs.plan(spec3, force="conv1x1_pallas")        # needs 1x1
+    assert (p.source, p.algorithm) == ("fallback", "lax")
+    strided = cs.ConvSpec((1, 8, 8, 4), (3, 3, 4, 4), (2, 2), (1, 1))
+    p = cs.plan(strided, force="cuconv_two_stage_pallas")  # stride-1 only
+    assert (p.source, p.algorithm) == ("fallback", "lax")
+    p = cs.plan(strided, force="winograd")            # 3x3 stride-1 only
+    assert (p.source, p.algorithm) == ("fallback", "lax")
+
+
+def test_normalize_pad_and_stride_validation():
+    assert cs.normalize_pad("same", 3, 3) == (1, 1)
+    assert cs.normalize_pad((2, 1), 3, 3) == (2, 1)
+    with pytest.raises(ValueError):
+        cs.normalize_pad(-1, 3, 3)
+    with pytest.raises(ValueError):
+        cs.normalize_pad((1, 2, 3), 3, 3)             # 3-tuple: was silent
+    with pytest.raises(ValueError):
+        cs.normalize_pad((-1, 0), 3, 3)
+    with pytest.raises(ValueError):
+        cs.normalize_stride(0)
+    with pytest.raises(ValueError):
+        cs.normalize_stride((1, 2, 3))
+
+
+def test_spec_rejects_nonpositive_output():
+    with pytest.raises(ValueError):
+        cs.ConvSpec((1, 2, 2, 1), (5, 5, 1, 1))       # filter > padded input
+
+
+def test_spec_direct_construction_validates_stride_and_pad():
+    """Direct ConvSpec construction is as strict as the normalize_* path."""
+    with pytest.raises(ValueError):
+        cs.ConvSpec((1, 8, 8, 4), (3, 3, 4, 4), (0, 1), (1, 1))
+    with pytest.raises(ValueError):
+        cs.ConvSpec((1, 8, 8, 4), (3, 3, 4, 4), (1, 1), (-1, -1))
 
 
 def test_spec_key_stable_and_epilogue_sensitive():
@@ -207,3 +270,28 @@ def test_measured_cache_ignored_for_other_spec(rng, tmp_path, monkeypatch):
     spec = cs.ConvSpec((1, 5, 5, 4), (3, 3, 4, 4))
     assert autotune.cached_best(spec) is None
     assert cs.plan(spec).source == "heuristic"
+
+
+def test_measure_default_candidates_include_pallas(rng, tmp_path, monkeypatch):
+    """Measured mode must be able to pick the kernels this repo exists
+    to showcase: the default candidate set is ALGORITHMS filtered by
+    supports(), and bias/activation ride into the timed executions."""
+    from repro.core import autotune
+    from repro.core.cuconv import ALGORITHMS
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    autotune.clear_cache()
+    spec = cs.ConvSpec((1, 4, 4, 4), (1, 1, 4, 3))
+    cands = set(autotune.default_candidates(spec))
+    assert {"cuconv_pallas", "conv1x1_pallas",
+            "cuconv_two_stage_pallas"} <= cands
+    strided = cs.ConvSpec((1, 8, 8, 4), (3, 3, 4, 3), (2, 2), (1, 1))
+    assert "cuconv_two_stage_pallas" not in set(
+        autotune.default_candidates(strided))
+    # the full default sweep runs (Pallas in interpret mode here) and
+    # times the fused-epilogue deployment, not the bare conv
+    x = _mk(rng, (1, 4, 4, 4), jnp.float32)
+    w = _mk(rng, (1, 1, 4, 3), jnp.float32)
+    b = _mk(rng, (3,), jnp.float32)
+    best = autotune.measure_algorithm(x, w, repeats=1, bias=b,
+                                      activation="relu")
+    assert best in ALGORITHMS
