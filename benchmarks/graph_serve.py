@@ -6,6 +6,11 @@ per-image latency of each bucketed program, and drives a mixed-size
 request stream through the batch-bucketed CnnServeEngine — the number
 the ROADMAP north-star cares about (planned programs serving traffic),
 alongside the per-layer plan table the per-call benchmarks print.
+
+The IR-era models (resnet_like with residual adds + pooling,
+mobilenet_like with depthwise/grouped stages) run the same steady-state
+sweep: their ENTIRE forward pass is one planned program, so the rows
+are directly comparable.
 """
 from __future__ import annotations
 
@@ -14,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, time_fn
-from repro.models.cnn import squeezenet_like
+from repro.models.cnn import mobilenet_like, resnet_like, squeezenet_like
 from repro.serve.cnn import CnnServeEngine, ImageRequest
 
 HW, C = 32, 3
@@ -59,4 +64,21 @@ def run(quick=True):
         f"buckets_used={len(used)}/{len(eng.buckets)} "
         f"padded={eng.stats['padded_slots']} "
         f"per_image_us={total_us / max(eng.stats['images'], 1):.1f}"))
+
+    # IR models: residual / pool / depthwise forward passes as ONE program
+    for mk in ((resnet_like,) if quick else (resnet_like, mobilenet_like)):
+        m = mk()
+        p = m.init(jax.random.PRNGKey(0))
+        gp = m.graph_plan((1, HW, HW, C))
+        stats = gp.warmup()
+        algos = ",".join(sorted({r["algorithm"] for r in stats["nodes"]}))
+        rows.append(csv_row(
+            f"graph/{m.name}_warmup", stats["total_ms"] * 1e3,
+            f"ir_nodes={len(gp.graph)} convs={len(stats['nodes'])} "
+            f"source={gp.source} algos={algos}"))
+        fn = jax.jit(lambda pp, x, gp=gp, m=m: m.apply(pp, x, graph_plan=gp))
+        x = jnp.asarray(rng.normal(size=(1, HW, HW, C)), jnp.float32)
+        us = time_fn(fn, p, x, repeats=3, warmup=1)
+        rows.append(csv_row(f"graph/{m.name}_steady_b1", us,
+                            f"whole-network program (pool/add/head inside)"))
     return rows

@@ -4,7 +4,7 @@ by filter size (1x1 / 3x3 / 5x5), across CNN configs x batch sizes.
 The paper compares against the best of all cuDNN variants on V100; this
 CPU container's analogue is the best of {lax (library), im2col (explicit
 GEMM)} — relative *algorithm* behaviour on XLA:CPU, not TPU wall-clock
-(DESIGN.md §6).  ``quick`` benchmarks a stratified subset (the paper's
+(DESIGN.md §7).  ``quick`` benchmarks a stratified subset (the paper's
 profiled configs + spread across nets/batches); ``full`` sweeps all
 distinct configs x (1, 8, 16) batches.
 """

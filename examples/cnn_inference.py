@@ -1,10 +1,12 @@
-"""End-to-end CNN inference through the graph planning API.
+"""End-to-end CNN inference through the typed operator-IR graph API.
 
 Builds a SqueezeNet-flavoured stack (1x1-heavy: the paper's best region),
-plans the WHOLE network once as a GraphPlan (per-layer explain table,
+plans the WHOLE network once as a GraphPlan (per-node explain table,
 one warmup sweep), compares the planned program against the library
-convolution, and serves a mixed-size request stream through the
-batch-bucketed CnnServeEngine.
+convolution, serves a mixed-size request stream through the
+batch-bucketed CnnServeEngine — and then does the same for a
+ResNet-flavoured network whose residual adds, maxpool and dense head
+all execute inside the one planned program (the IR's reason to exist).
 
   PYTHONPATH=src python examples/cnn_inference.py
 """
@@ -14,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.cnn import squeezenet_like
+from repro.core.convspec import PLAN_STATS, reset_plan_stats
+from repro.models.cnn import resnet_like, squeezenet_like
 from repro.serve.cnn import CnnServeEngine, ImageRequest
 
 model = squeezenet_like()
@@ -55,3 +58,22 @@ used = {b: n for b, n in eng.stats["batches"].items() if n}
 print(f"served {len(done)} requests / {eng.stats['images']} images in "
       f"{sum(used.values())} batches (buckets used: {used}, "
       f"padded slots: {eng.stats['padded_slots']})")
+
+# ---------------------------------------------------------------------------
+# a real network shape: residual adds + pooling + head, ONE program
+resnet = resnet_like()
+rparams = resnet.init(jax.random.PRNGKey(1))
+rgp = resnet.graph_plan((1, 32, 32, 3))
+print("\n" + rgp.explain())
+rgp.warmup()
+eng = CnnServeEngine(resnet, rparams, (32, 32, 3), buckets=(1, 4))
+eng.warmup()
+reset_plan_stats()
+for i, n in enumerate([2, 1, 3]):
+    eng.submit(ImageRequest(
+        rid=i, images=rng.normal(size=(n, 32, 32, 3)).astype(np.float32)))
+done = eng.run()
+assert PLAN_STATS["resolutions"] == 0, "warm engine must never re-plan"
+print(f"resnet_like: served {eng.stats['images']} images through "
+      f"{len(eng.compiled_buckets)} planned programs with zero plan() "
+      f"resolutions")

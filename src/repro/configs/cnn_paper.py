@@ -99,6 +99,20 @@ NETWORKS: Dict[str, List[Conv]] = {
     "vgg19": VGG19,
 }
 
+# Depthwise stages of MobileNet v1 (3x3, groups == C): outside the
+# paper's five networks — the paper has no grouped convs at all — but
+# the operator IR plans them end-to-end via feature_group_count, so the
+# benchmark/test surface names real configurations here.
+GroupedConv = Tuple[int, int, int, int, int]   # (H=W, K, M, C, groups)
+
+MOBILENET_DW: List[GroupedConv] = [
+    (112, 3, 32, 32, 32),
+    (56, 3, 64, 64, 64),
+    (28, 3, 128, 128, 128),
+    (14, 3, 256, 256, 256),
+    (7, 3, 512, 512, 512),
+]
+
 # configurations profiled in the paper's tables 3-5
 # label -> (hw, batch, k, M, C)
 PROFILED = {

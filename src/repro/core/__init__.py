@@ -1,4 +1,6 @@
 from repro.core.cuconv import (  # noqa: F401
     conv2d, cuconv_stage1, cuconv_stage2, ALGORITHMS)
 from repro.core.convspec import ConvSpec, ConvPlan, plan  # noqa: F401
-from repro.core.graph import ConvGraph, GraphPlan, plan_graph  # noqa: F401
+from repro.core.graph import (  # noqa: F401
+    AddOp, ConcatOp, ConvGraph, ConvOp, DenseOp, GapOp, Graph,
+    GraphBuilder, GraphPlan, PoolOp, plan_graph)

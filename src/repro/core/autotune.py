@@ -76,7 +76,8 @@ def default_candidates(spec: ConvSpec) -> Sequence[str]:
 
 def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
                       candidates: Optional[Sequence[str]] = None,
-                      bias=None, activation: Optional[str] = None) -> str:
+                      bias=None, activation: Optional[str] = None,
+                      groups: int = 1) -> str:
     """Time every viable candidate (compiled, synced), persist the winner.
 
     The cuDNN-style exhaustive search the paper used for its baselines;
@@ -90,7 +91,7 @@ def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
     elsewhere); the persisted key stays epilogue-insensitive.
     """
     spec = ConvSpec.for_conv(x, w, stride, padding, bias=bias,
-                             activation=activation)
+                             activation=activation, groups=groups)
     backend = jax.default_backend()
     hit = cached_best(spec, backend)
     if hit is not None:

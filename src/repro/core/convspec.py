@@ -84,18 +84,27 @@ _norm_stride = normalize_stride
 class ConvSpec:
     """Descriptor of one convolution: the planner's (and caches') key."""
     in_shape: Tuple[int, int, int, int]       # (N, H, W, C) NHWC
-    filter_shape: Tuple[int, int, int, int]   # (KH, KW, C, M) HWIO
+    filter_shape: Tuple[int, int, int, int]   # (KH, KW, C/groups, M) HWIO
     stride: Tuple[int, int] = (1, 1)          # (sh, sw)
     padding: Tuple[int, int] = (0, 0)         # (ph, pw), pre-normalized
     dtype: str = "float32"
     epilogue: str = "none"                    # none | bias | relu | bias_relu
+    groups: int = 1                           # feature groups (depthwise: C)
 
     def __post_init__(self):
         if self.epilogue not in EPILOGUES:
             raise ValueError(f"epilogue {self.epilogue!r} not in {EPILOGUES}")
-        if self.in_shape[3] != self.filter_shape[2]:
-            raise ValueError(f"channel mismatch: input {self.in_shape} "
-                             f"vs filter {self.filter_shape}")
+        if not isinstance(self.groups, int) or self.groups < 1:
+            raise ValueError(f"groups must be a positive int; "
+                             f"got {self.groups!r}")
+        if self.in_shape[3] != self.filter_shape[2] * self.groups:
+            raise ValueError(
+                f"channel mismatch: input {self.in_shape} needs filter "
+                f"depth {self.in_shape[3]} / groups={self.groups}; "
+                f"filter {self.filter_shape}")
+        if self.filter_shape[3] % self.groups:
+            raise ValueError(f"output channels {self.filter_shape[3]} not "
+                             f"divisible by groups={self.groups}")
         # direct construction must be as strict as the normalize_* path
         if len(self.stride) != 2 or any(s < 1 for s in self.stride):
             raise ValueError(f"stride must be an (sh, sw) pair >= 1; "
@@ -111,15 +120,25 @@ class ConvSpec:
 
     @classmethod
     def for_conv(cls, x, w, stride=1, padding: Pad = "same",
-                 bias=None, activation: Optional[str] = None) -> "ConvSpec":
-        """Build a spec from (possibly traced) operands + call options."""
+                 bias=None, activation: Optional[str] = None,
+                 groups: int = 1) -> "ConvSpec":
+        """Build a spec from (possibly traced) operands + call options.
+
+        Unknown activations are an error, not a silent epilogue "none":
+        the planner only knows how to fuse what EPILOGUES names.
+        """
+        if activation not in (None, "none", "relu"):
+            raise ValueError(
+                f"activation {activation!r} not supported; the planner "
+                f"fuses None or 'relu' (epilogues: {EPILOGUES})")
+        relu = activation == "relu"
         kh, kw = int(w.shape[0]), int(w.shape[1])
-        epi = ("bias_relu" if bias is not None and activation == "relu"
+        epi = ("bias_relu" if bias is not None and relu
                else "bias" if bias is not None
-               else "relu" if activation == "relu" else "none")
+               else "relu" if relu else "none")
         return cls(tuple(map(int, x.shape)), tuple(map(int, w.shape)),
                    normalize_stride(stride), normalize_pad(padding, kh, kw),
-                   str(x.dtype), epi)
+                   str(x.dtype), epi, int(groups))
 
     # -- derived geometry ------------------------------------------------
     @property
@@ -146,12 +165,17 @@ class ConvSpec:
         return self.epilogue in ("relu", "bias_relu")
 
     def key(self) -> str:
-        """Stable string key for persisted caches."""
+        """Stable string key for persisted caches.
+
+        Ungrouped specs keep the historical key shape (no ``-g`` segment)
+        so pre-groups persisted autotune entries stay valid.
+        """
         n, h, w, c = self.in_shape
         kh, kw, _, m = self.filter_shape
+        g = f"-g{self.groups}" if self.groups != 1 else ""
         return (f"n{n}h{h}w{w}c{c}-k{kh}x{kw}m{m}-s{self.stride[0]}x"
                 f"{self.stride[1]}-p{self.padding[0]}x{self.padding[1]}-"
-                f"{self.dtype}-{self.epilogue}")
+                f"{self.dtype}-{self.epilogue}{g}")
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +190,14 @@ def fused_vmem_bytes(spec: ConvSpec) -> int:
 
 def supports(algorithm: str, spec: ConvSpec) -> Tuple[bool, str]:
     """Can `algorithm` execute `spec` exactly (ignoring speed)?"""
+    if spec.groups != 1:
+        # no dedicated grouped/depthwise kernel yet: only the library
+        # conv (feature_group_count) executes grouped specs exactly
+        if algorithm == "lax":
+            return True, (f"grouped conv (groups={spec.groups}): library "
+                          f"feature_group_count")
+        return False, (f"no grouped-conv support (groups={spec.groups}); "
+                       f"lax feature_group_count is the executor")
     if algorithm == "cuconv_pallas":
         if fused_vmem_bytes(spec) > FUSED_VMEM_BUDGET:
             return False, (f"fused working set "
@@ -204,6 +236,9 @@ def heuristic_algorithm(spec: ConvSpec, backend: str) -> Tuple[str, str]:
     n, h, _, _ = spec.in_shape
     kh, kw = spec.filter_shape[:2]
     on_tpu = backend == "tpu"
+    if spec.groups != 1:
+        return "lax", (f"grouped conv (groups={spec.groups}): library "
+                       f"feature_group_count")
     fused_ok, _ = supports("cuconv_pallas", spec)
     if not spec.unit_stride:
         if on_tpu and fused_ok:
@@ -235,6 +270,14 @@ def heuristic_algorithm(spec: ConvSpec, backend: str) -> Tuple[str, str]:
 # NOTHING else does.  The graph layer's plan-once contract is asserted
 # against this ("warmup then N inferences adds zero resolutions").
 PLAN_STATS = {"resolutions": 0}
+
+
+def reset_plan_stats() -> int:
+    """Zero the resolution counter (tests use this, not dict-poking);
+    returns the count that was discarded."""
+    old = PLAN_STATS["resolutions"]
+    PLAN_STATS["resolutions"] = 0
+    return old
 
 
 @dataclasses.dataclass(frozen=True)
@@ -269,6 +312,9 @@ class ConvPlan:
         kwargs = {}
         if self.algorithm in ("conv1x1_pallas", "cuconv_two_stage_pallas"):
             kwargs["interpret"] = self.interpret   # honor debug requests
+        if spec.groups != 1:
+            # supports() routes every grouped spec to the library conv
+            kwargs["groups"] = spec.groups
         y = cuconv.ALGORITHMS[self.algorithm](
             x, w, stride=spec.stride, padding=spec.padding, **kwargs)
         # two-stage epilogue for non-fused paths: one extra HBM round trip
@@ -316,6 +362,8 @@ def plan(spec: ConvSpec, force: Optional[str] = None,
 
 def _fallback_for(algorithm: str, spec: ConvSpec) -> Tuple[str, str]:
     """Closest supported stand-in for an unsupported forced algorithm."""
+    if spec.groups != 1:
+        return "lax", "feature_group_count executes grouped convs"
     if algorithm == "cuconv_pallas":
         if spec.unit_stride:
             # the old kernels/ops.py behaviour: oversized rows take the

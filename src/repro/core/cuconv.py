@@ -52,14 +52,19 @@ def _pad_input(x, ph, pw):
 # ---------------------------------------------------------------------------
 # Baselines
 
-def conv_lax(x, w, stride=1, padding: Pad = "same"):
-    """Library convolution (XLA's native conv; the cuDNN analogue)."""
+def conv_lax(x, w, stride=1, padding: Pad = "same", groups=1):
+    """Library convolution (XLA's native conv; the cuDNN analogue).
+
+    ``groups`` maps to ``feature_group_count``: the only executor that
+    runs grouped/depthwise specs exactly (filter depth is C/groups).
+    """
     kh, kw = w.shape[0], w.shape[1]
     ph, pw = _norm_pad(padding, kh, kw)
     return jax.lax.conv_general_dilated(
         x, w, window_strides=_norm_stride(stride),
         padding=((ph, ph), (pw, pw)),
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
 
 
 def conv_im2col(x, w, stride=1, padding: Pad = "same"):
@@ -214,19 +219,21 @@ ALGORITHMS = {
 
 
 def conv2d(x, w, stride=1, padding: Pad = "same", algorithm="auto",
-           bias=None, activation: Optional[str] = None):
+           bias=None, activation: Optional[str] = None, groups=1):
     """Public conv entry point: a thin wrapper over the ConvSpec planner.
 
-    x: (N,H,W,C) NHWC; w: (KH,KW,C,M) HWIO; bias: optional (M,);
-    activation: None | 'relu'.  algorithm="auto" lets plan() choose
-    (measured cache > paper-region heuristic); naming an algorithm
-    forces it, still subject to plan's capability guards (e.g. the
-    fused kernel's VMEM budget).  The bias/activation epilogue is fused
-    into the Pallas kernel when that path is planned, and applied as XLA
-    ops otherwise.
+    x: (N,H,W,C) NHWC; w: (KH,KW,C/groups,M) HWIO; bias: optional (M,);
+    activation: None | 'relu' (anything else raises — no silent epilogue
+    drop).  groups > 1 requests a grouped/depthwise conv, executed via
+    the library's feature_group_count (plan() routes it there).
+    algorithm="auto" lets plan() choose (measured cache > paper-region
+    heuristic); naming an algorithm forces it, still subject to plan's
+    capability guards (e.g. the fused kernel's VMEM budget).  The
+    bias/activation epilogue is fused into the Pallas kernel when that
+    path is planned, and applied as XLA ops otherwise.
     """
     from repro.core.convspec import ConvSpec, plan
     spec = ConvSpec.for_conv(x, w, stride, padding, bias=bias,
-                             activation=activation)
+                             activation=activation, groups=groups)
     p = plan(spec, force=None if algorithm == "auto" else algorithm)
     return p(x, w, bias)

@@ -1,45 +1,62 @@
-"""Graph plan layer: plan a whole network once, serve it as a program.
+"""Typed operator-IR graph layer: plan a whole network once, serve it.
 
 The per-call ``conv2d`` path builds a ConvSpec and resolves a plan at
-every call site, so nothing ever sees the network as a whole.  cuDNN
-moved from per-call descriptors to a graph API for exactly this reason;
-this module is that seam for the repo (DESIGN.md §5):
+every call site; the first graph layer chained same-epilogue convs but
+could not express what the paper's evaluation networks actually contain
+(residual adds, pooling, fire-module concats, grouped/depthwise convs).
+cuDNN moved from per-op descriptors to a graph API for exactly this
+reason; this module is that seam for the repo (DESIGN.md §6):
 
-  ConvGraph   ordered chain of ConvSpec nodes — the conv skeleton of a
-              network, derived from a model layer list + input geometry.
-              ``signature()`` is its stable identity (the cache key).
-  GraphPlan   per-node ConvPlans resolved ONCE, with a single
-              ``explain()`` table for the whole network, a ``warmup()``
-              that compiles (and optionally measure-autotunes) every
-              node in one sweep, and ``run()`` to execute the chain.
+  OpSpec      typed IR node, one frozen dataclass per operator:
+              ConvOp (a ConvSpec — including grouped/depthwise),
+              PoolOp (max/avg), AddOp (residual, optional ReLU),
+              ConcatOp (channel axis), GapOp, DenseOp.  Nodes are
+              *named* and name their input edges explicitly.
+  Graph       a DAG of OpSpec nodes in topological order, shape-checked
+              at construction (every edge's producer shape must satisfy
+              the consumer).  ``signature()`` is its stable identity —
+              schema-versioned key material for the persisted cache.
+  GraphPlan   per-conv-node ConvPlans resolved ONCE (keyed by node
+              name), one ``explain()`` table for the whole network, a
+              ``warmup()`` compile/measure sweep, ``run()`` to execute
+              the DAG.
   plan_graph  resolves a GraphPlan, consulting a persisted graph-level
-              cache (``$REPRO_CACHE_DIR/graphplans.json``, next to
-              ``autotune.json``) keyed by backend + graph signature —
-              a warm process constructs the whole program with ZERO
-              per-node plan() resolutions.
+              cache (``$REPRO_CACHE_DIR/graphplans.json``) keyed by
+              backend + signature — a warm process constructs the whole
+              program with ZERO per-node plan() resolutions.  Entries
+              carry a ``schema`` field; unversioned or mismatched
+              entries are dropped, never misread.
 
-``models.cnn.SimpleCNN`` builds on this (one pre-resolved program per
-input geometry instead of re-planning inside every conv block), and
-``serve.cnn.CnnServeEngine`` multiplexes request streams onto a small
-set of batch-bucketed GraphPlan programs.
+``ConvGraph`` (the PR-2 chained-ConvSpec API) survives as a thin
+compatibility constructor that lowers to the IR; ``plan_graph`` accepts
+either.  ``models.cnn`` builds whole forward passes — pools, residuals,
+depthwise stages, GAP + dense head — as one planned, bucketable program
+that ``serve.cnn.CnnServeEngine`` multiplexes request streams onto.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import re
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.convspec import (ConvPlan, ConvSpec, normalize_pad,
-                                 normalize_stride, plan, supports)
+                                 normalize_stride, out_size, plan, supports)
 from repro.core.plancache import JsonCache
 
 LayerSpec = Tuple[int, int, int, int]          # (kh, kw, c_out, stride)
 
-# graph-level plan cache: {f"{backend}/{signature}": {"algorithms": [...]}}
+# Persisted graph-plan entry schema.  v1 was the positional
+# {"algorithms": [...]} list of the chain era (implicitly unversioned);
+# v2 is {"schema": 2, "algorithms": {node_name: algo}} over the IR.
+GRAPH_SCHEMA = 2
+
+# graph-level plan cache: {f"{backend}/{signature}": entry}
 _STORE = JsonCache("graphplans.json")
 
 
@@ -48,9 +65,352 @@ def clear_cache() -> None:
     _STORE.clear()
 
 
+# ---------------------------------------------------------------------------
+# the operator IR
+
+_NAME_RE = re.compile(r"[A-Za-z0-9_.\-]+")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """Base IR node: a named operator with explicit input edges."""
+    name: str
+    inputs: Tuple[str, ...]
+
+    op = "op"                    # overridden per subclass
+
+    def __post_init__(self):
+        # names are signature key material: restrict them to a charset
+        # disjoint from descriptor() delimiters so signatures can never
+        # be ambiguous
+        for n in (self.name,) + tuple(self.inputs):
+            if not _NAME_RE.fullmatch(n):
+                raise ValueError(f"node/edge names must match "
+                                 f"[A-Za-z0-9_.-]+; got {n!r}")
+        if not self.inputs:
+            raise ValueError(f"node {self.name!r} has no inputs")
+
+    # -- IR contract per subclass ---------------------------------------
+    def infer_shape(self, in_shapes: Sequence[Tuple[int, ...]]) -> Tuple:
+        raise NotImplementedError
+
+    def descriptor(self) -> str:
+        """Stable per-node key material (feeds Graph.signature())."""
+        return f"{self.op}:{self.name}<{','.join(self.inputs)}>"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvOp(OpSpec):
+    """A planned convolution node (the only node kind plan() resolves)."""
+    spec: ConvSpec = None
+
+    op = "conv"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not isinstance(self.spec, ConvSpec):
+            raise ValueError(f"conv node {self.name!r} needs a ConvSpec")
+        if len(self.inputs) != 1:
+            raise ValueError(f"conv node {self.name!r} takes exactly one "
+                             f"input; got {self.inputs}")
+
+    def infer_shape(self, in_shapes):
+        (s,) = in_shapes
+        if tuple(s) != self.spec.in_shape:
+            raise ValueError(f"conv node {self.name!r} expects input shape "
+                             f"{self.spec.in_shape} but edge "
+                             f"{self.inputs[0]!r} produces {tuple(s)}")
+        return self.spec.out_shape
+
+    def descriptor(self):
+        return f"{super().descriptor()}:{self.spec.key()}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolOp(OpSpec):
+    """Windowed max/avg pooling (NHWC)."""
+    kind: str = "max"                         # max | avg
+    window: Tuple[int, int] = (2, 2)
+    stride: Tuple[int, int] = (2, 2)
+    padding: Tuple[int, int] = (0, 0)
+
+    op = "pool"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.kind not in ("max", "avg"):
+            raise ValueError(f"pool node {self.name!r}: kind must be "
+                             f"'max' or 'avg'; got {self.kind!r}")
+        if len(self.inputs) != 1:
+            raise ValueError(f"pool node {self.name!r} takes exactly one "
+                             f"input; got {self.inputs}")
+
+    def infer_shape(self, in_shapes):
+        (s,) = in_shapes
+        if len(s) != 4:
+            raise ValueError(f"pool node {self.name!r} needs an NHWC "
+                             f"input; got shape {tuple(s)}")
+        n, h, w, c = s
+        (kh, kw), (sh, sw), (ph, pw) = self.window, self.stride, self.padding
+        oh, ow = out_size(h, kh, ph, sh), out_size(w, kw, pw, sw)
+        if oh <= 0 or ow <= 0:
+            raise ValueError(f"pool node {self.name!r} produces empty "
+                             f"output from input {tuple(s)}")
+        return (n, oh, ow, c)
+
+    def descriptor(self):
+        return (f"{super().descriptor()}:{self.kind}{self.window[0]}x"
+                f"{self.window[1]}s{self.stride[0]}x{self.stride[1]}"
+                f"p{self.padding[0]}x{self.padding[1]}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AddOp(OpSpec):
+    """Elementwise sum of >= 2 same-shape inputs (residual connections);
+    optional fused ReLU after the add (the post-residual activation)."""
+    activation: str = "none"                  # none | relu
+
+    op = "add"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if len(self.inputs) < 2:
+            raise ValueError(f"add node {self.name!r} needs >= 2 inputs")
+        if self.activation not in ("none", "relu"):
+            raise ValueError(f"add node {self.name!r}: activation must be "
+                             f"'none' or 'relu'; got {self.activation!r}")
+
+    def infer_shape(self, in_shapes):
+        first = tuple(in_shapes[0])
+        for edge, s in zip(self.inputs, in_shapes):
+            if tuple(s) != first:
+                raise ValueError(
+                    f"add node {self.name!r}: input {edge!r} has shape "
+                    f"{tuple(s)} but {self.inputs[0]!r} has {first}")
+        return first
+
+    def descriptor(self):
+        return f"{super().descriptor()}:{self.activation}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConcatOp(OpSpec):
+    """Channel-axis concatenation (fire-module expand branches)."""
+
+    op = "concat"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if len(self.inputs) < 2:
+            raise ValueError(f"concat node {self.name!r} needs >= 2 inputs")
+
+    def infer_shape(self, in_shapes):
+        lead = tuple(in_shapes[0][:-1])
+        for edge, s in zip(self.inputs, in_shapes):
+            if tuple(s[:-1]) != lead:
+                raise ValueError(
+                    f"concat node {self.name!r}: input {edge!r} has "
+                    f"non-channel dims {tuple(s[:-1])} but "
+                    f"{self.inputs[0]!r} has {lead}")
+        return lead + (sum(int(s[-1]) for s in in_shapes),)
+
+
+@dataclasses.dataclass(frozen=True)
+class GapOp(OpSpec):
+    """Global average pool: (N, H, W, C) -> (N, C) (the classifier neck)."""
+
+    op = "gap"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if len(self.inputs) != 1:
+            raise ValueError(f"gap node {self.name!r} takes exactly one "
+                             f"input; got {self.inputs}")
+
+    def infer_shape(self, in_shapes):
+        (s,) = in_shapes
+        if len(s) != 4:
+            raise ValueError(f"gap node {self.name!r} needs an NHWC "
+                             f"input; got shape {tuple(s)}")
+        return (s[0], s[3])
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseOp(OpSpec):
+    """Linear head: (N, C) @ (C, K) [+ b] -> (N, K)."""
+    features: Tuple[int, int] = None          # (c_in, c_out)
+    bias: bool = True
+
+    op = "dense"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if (not isinstance(self.features, tuple) or len(self.features) != 2
+                or any(int(f) < 1 for f in self.features)):
+            raise ValueError(f"dense node {self.name!r} needs features="
+                             f"(c_in, c_out); got {self.features!r}")
+        if len(self.inputs) != 1:
+            raise ValueError(f"dense node {self.name!r} takes exactly one "
+                             f"input; got {self.inputs}")
+
+    def infer_shape(self, in_shapes):
+        (s,) = in_shapes
+        if len(s) != 2 or int(s[1]) != self.features[0]:
+            raise ValueError(f"dense node {self.name!r} needs input "
+                             f"(N, {self.features[0]}); got {tuple(s)}")
+        return (s[0], self.features[1])
+
+    def descriptor(self):
+        return (f"{super().descriptor()}:{self.features[0]}x"
+                f"{self.features[1]}:bias={int(self.bias)}")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Graph:
+    """A DAG of named OpSpec nodes over one graph input.
+
+    ``nodes`` must be in topological order (every edge names the graph
+    input or an earlier node — which also rules out cycles); shapes are
+    inferred and checked edge-by-edge at construction.  ``output`` names
+    the node whose value ``run`` returns (default: the last node).
+    """
+    nodes: Tuple[OpSpec, ...]
+    in_shape: Tuple[int, ...]
+    input_name: str = "input"
+    output: Optional[str] = None
+
+    def __post_init__(self):
+        if not self.nodes:
+            raise ValueError("Graph needs at least one node")
+        shapes: Dict[str, Tuple[int, ...]] = {
+            self.input_name: tuple(map(int, self.in_shape))}
+        for node in self.nodes:
+            if node.name in shapes:
+                raise ValueError(f"duplicate node name {node.name!r}")
+            missing = [e for e in node.inputs if e not in shapes]
+            if missing:
+                raise ValueError(
+                    f"node {node.name!r} consumes undefined edge(s) "
+                    f"{missing}: nodes must be listed after their inputs "
+                    f"(topological order; cycles are impossible)")
+            shapes[node.name] = node.infer_shape(
+                [shapes[e] for e in node.inputs])
+        out = self.output if self.output is not None else self.nodes[-1].name
+        if out not in shapes or out == self.input_name:
+            raise ValueError(f"output {out!r} is not a node of the graph")
+        object.__setattr__(self, "output", out)
+        object.__setattr__(self, "shapes", shapes)
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def out_shape(self) -> Tuple[int, ...]:
+        return self.shapes[self.output]
+
+    @property
+    def conv_nodes(self) -> Tuple[ConvOp, ...]:
+        return tuple(n for n in self.nodes if isinstance(n, ConvOp))
+
+    def node(self, name: str) -> OpSpec:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def signature(self) -> str:
+        """Stable graph identity: schema-versioned key material for the
+        persisted plan cache."""
+        blob = "|".join(
+            [f"v{GRAPH_SCHEMA}", f"in{tuple(self.in_shape)}",
+             f"out:{self.output}"] + [n.descriptor() for n in self.nodes])
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+
+class GraphBuilder:
+    """Incremental Graph construction with shape threading.
+
+    Each method appends one named node consuming named edges and returns
+    the node name, so network definitions read as dataflow:
+
+        b = GraphBuilder((1, 32, 32, 3))
+        y = b.conv("stem", "input", 3, 16)
+        y = b.pool("pool", y)
+        ...
+        b.graph()
+
+    Shapes are tracked as nodes are added (conv specs are derived from
+    the producer's shape), and the finished ``Graph`` re-validates the
+    whole DAG at construction.
+    """
+
+    def __init__(self, in_shape, dtype: str = "float32",
+                 input_name: str = "input"):
+        self.in_shape = tuple(map(int, in_shape))
+        self.dtype = dtype
+        self.input_name = input_name
+        self.nodes: List[OpSpec] = []
+        self.shapes: Dict[str, Tuple[int, ...]] = {
+            input_name: self.in_shape}
+
+    def _put(self, node: OpSpec) -> str:
+        self.shapes[node.name] = node.infer_shape(
+            [self.shapes[e] for e in node.inputs])
+        self.nodes.append(node)
+        return node.name
+
+    def conv(self, name: str, src: str, k, c_out: int, *, stride=1,
+             padding="same", epilogue: str = "bias_relu",
+             groups: int = 1) -> str:
+        kh, kw = (k, k) if isinstance(k, int) else k
+        in_shape = self.shapes[src]
+        spec = ConvSpec(in_shape, (kh, kw, in_shape[3] // groups, c_out),
+                        normalize_stride(stride),
+                        normalize_pad(padding, kh, kw),
+                        self.dtype, epilogue, groups)
+        return self._put(ConvOp(name, (src,), spec))
+
+    def pool(self, name: str, src: str, *, kind: str = "max", window=2,
+             stride=None, padding=0) -> str:
+        win = (window, window) if isinstance(window, int) else tuple(window)
+        stride = win if stride is None else (
+            (stride, stride) if isinstance(stride, int) else tuple(stride))
+        pad = (padding, padding) if isinstance(padding, int) \
+            else tuple(padding)
+        return self._put(PoolOp(name, (src,), kind, win, stride, pad))
+
+    def add(self, name: str, srcs: Sequence[str], *,
+            activation: str = "none") -> str:
+        return self._put(AddOp(name, tuple(srcs), activation))
+
+    def concat(self, name: str, srcs: Sequence[str]) -> str:
+        return self._put(ConcatOp(name, tuple(srcs)))
+
+    def gap(self, name: str, src: str) -> str:
+        return self._put(GapOp(name, (src,)))
+
+    def dense(self, name: str, src: str, c_out: int, *,
+              bias: bool = True) -> str:
+        c_in = int(self.shapes[src][-1])
+        return self._put(DenseOp(name, (src,), (c_in, c_out), bias))
+
+    def graph(self, output: Optional[str] = None) -> Graph:
+        return Graph(tuple(self.nodes), self.in_shape,
+                     self.input_name, output)
+
+
+# ---------------------------------------------------------------------------
+# back-compat: the chained-ConvSpec constructor, lowering to the IR
+
 @dataclasses.dataclass(frozen=True)
 class ConvGraph:
-    """Ordered chain of ConvSpec nodes: the conv skeleton of a network."""
+    """Ordered chain of ConvSpec nodes (the pre-IR graph API).
+
+    Kept as a thin compatibility constructor: ``plan_graph`` lowers it
+    to a ``Graph`` of conv nodes named ``conv0..convN`` via ``to_ir()``
+    (see README "Migrating from ConvGraph.chain").
+    """
     nodes: Tuple[ConvSpec, ...]
 
     def __post_init__(self):
@@ -65,18 +425,29 @@ class ConvGraph:
     @classmethod
     def chain(cls, layers: Sequence[LayerSpec], in_shape, *,
               padding="same", dtype: str = "float32",
-              epilogue: str = "bias_relu") -> "ConvGraph":
+              epilogue: Union[str, Sequence[str]] = "bias_relu"
+              ) -> "ConvGraph":
         """Derive the spec chain from a layer list + input geometry.
 
         ``layers`` uses the SimpleCNN convention ``(kh, kw, c_out,
         stride)``; each node's output geometry feeds the next node.
+        ``epilogue`` is one epilogue for every layer, or a per-layer
+        sequence (e.g. ``bias_relu`` everywhere but a final ``bias`` on
+        a classifier's last conv).
         """
+        if isinstance(epilogue, str):
+            epilogues = [epilogue] * len(layers)
+        else:
+            epilogues = list(epilogue)
+            if len(epilogues) != len(layers):
+                raise ValueError(f"epilogue sequence has {len(epilogues)} "
+                                 f"entries for {len(layers)} layers")
         n, h, w, c = map(int, in_shape)
         nodes: List[ConvSpec] = []
-        for kh, kw, co, s in layers:
+        for (kh, kw, co, s), epi in zip(layers, epilogues):
             spec = ConvSpec((n, h, w, c), (kh, kw, c, co),
                             normalize_stride(s), normalize_pad(padding, kh, kw),
-                            dtype, epilogue)
+                            dtype, epi)
             nodes.append(spec)
             _, h, w, c = spec.out_shape
         return cls(tuple(nodes))
@@ -89,79 +460,172 @@ class ConvGraph:
     def out_shape(self) -> Tuple[int, int, int, int]:
         return self.nodes[-1].out_shape
 
+    def to_ir(self) -> Graph:
+        """Lower the chain to the operator IR: conv nodes ``conv{i}``,
+        each consuming its predecessor."""
+        prev, ops = "input", []
+        for i, spec in enumerate(self.nodes):
+            name = f"conv{i}"
+            ops.append(ConvOp(name, (prev,), spec))
+            prev = name
+        return Graph(tuple(ops), self.in_shape)
+
     def signature(self) -> str:
-        """Stable graph identity: the persisted plan cache's key material."""
-        blob = "|".join(s.key() for s in self.nodes)
-        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+        """Stable graph identity — the lowered IR's signature, so chain
+        callers and IR callers share one cache namespace."""
+        return self.to_ir().signature()
 
     def __len__(self) -> int:
         return len(self.nodes)
 
 
+GraphLike = Union[Graph, ConvGraph]
+
+
+def _as_ir(graph: GraphLike) -> Graph:
+    return graph.to_ir() if isinstance(graph, ConvGraph) else graph
+
+
+# ---------------------------------------------------------------------------
+# the planned program
+
 @dataclasses.dataclass
 class GraphPlan:
-    """Whole-network plan: one resolved ConvPlan per graph node.
+    """Whole-network plan: one resolved ConvPlan per conv node, keyed by
+    node name.
 
     Mutable only through ``warmup(measure=True)``, which may swap node
     plans for measured winners; execution itself never re-plans.
     """
-    graph: ConvGraph
-    node_plans: Tuple[ConvPlan, ...]
+    graph: Graph
+    conv_plans: Dict[str, ConvPlan]
     backend: str
     source: str                  # resolved | graph_cache | forced
-    # per-node jitted executables, shared by warmup() and run() so the
-    # warmup compile sweep is the same program inference reuses
-    _jitted: Dict[int, Callable] = dataclasses.field(
+    # per-conv-node jitted executables, shared by warmup() and run() so
+    # the warmup compile sweep is the same program inference reuses
+    _jitted: Dict[str, Callable] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
 
-    def _node_fn(self, i: int) -> Callable:
-        fn = self._jitted.get(i)
+    @property
+    def node_plans(self) -> Tuple[ConvPlan, ...]:
+        """Conv-node plans in graph order (chain-era read surface)."""
+        return tuple(self.conv_plans[n.name] for n in self.graph.conv_nodes)
+
+    def _node_fn(self, name: str) -> Callable:
+        fn = self._jitted.get(name)
         if fn is None:
-            fn = jax.jit(self.node_plans[i])
-            self._jitted[i] = fn
+            fn = jax.jit(self.conv_plans[name])
+            self._jitted[name] = fn
         return fn
 
     def explain(self) -> str:
-        """One aligned table for the whole network."""
+        """One aligned table for the whole network (every IR node)."""
         lines = [f"GraphPlan[{self.source}] backend={self.backend} "
                  f"sig={self.graph.signature()} nodes={len(self.graph)}"]
-        for i, p in enumerate(self.node_plans):
-            s = p.spec
-            n, h, w, c = s.in_shape
-            kh, kw, _, m = s.filter_shape
-            lines.append(
-                f"  {i:3d}  {h:>3d}x{w:<3d} c{c:<4d} {kh}x{kw}/"
-                f"{s.stride[0]} m{m:<4d} -> {p.algorithm:24s} "
-                f"[{p.source}] {p.reason}")
+        for node in self.graph.nodes:
+            if isinstance(node, ConvOp):
+                p = self.conv_plans[node.name]
+                s = p.spec
+                n, h, w, c = s.in_shape
+                kh, kw, _, m = s.filter_shape
+                grp = f" g{s.groups}" if s.groups != 1 else ""
+                lines.append(
+                    f"  {node.name:>8s}  {h:>3d}x{w:<3d} c{c:<4d} {kh}x{kw}/"
+                    f"{s.stride[0]}{grp} m{m:<4d} -> {p.algorithm:24s} "
+                    f"[{p.source}] {p.reason}")
+            else:
+                out = self.graph.shapes[node.name]
+                lines.append(f"  {node.name:>8s}  {node.descriptor():50s} "
+                             f"-> {out}")
         return "\n".join(lines)
 
     # -- execution -------------------------------------------------------
-    def run(self, x, weights: Sequence):
-        """Execute the conv chain on ``x``.
+    def _named_params(self, params) -> Mapping[str, Mapping]:
+        """Accept name-keyed params, or the chain-era list of (w, b)
+        pairs assigned to conv nodes in graph order."""
+        if isinstance(params, Mapping):
+            return params
+        convs = self.graph.conv_nodes
+        pairs = list(params)
+        if len(pairs) != len(convs):
+            raise ValueError(f"graph has {len(convs)} conv nodes but got "
+                             f"{len(pairs)} weight pairs")
+        named = {}
+        for node, (w, b) in zip(convs, pairs):
+            named[node.name] = ({"w": w} if b is None
+                                else {"w": w, "b": b})
+        return named
 
-        ``weights``: one ``(w, bias)`` pair (bias may be None for
-        epilogues without bias) per node, in graph order.  No plan()
+    def _node_params(self, params: Mapping, node: OpSpec,
+                     wants_bias: bool) -> Mapping:
+        """One node's param dict, with errors that name the node instead
+        of a bare KeyError from inside the DAG walk."""
+        p = params.get(node.name)
+        if p is None or "w" not in p:
+            raise ValueError(
+                f"params missing {'entry' if p is None else 'weight'} for "
+                f"{node.op} node {node.name!r} (param keys: "
+                f"{sorted(params)})")
+        if wants_bias and "b" not in p:
+            raise ValueError(f"{node.op} node {node.name!r} wants a bias "
+                             f"but params carry none")
+        return p
+
+    def run(self, x, params):
+        """Execute the DAG on ``x``.
+
+        ``params``: ``{node_name: {"w": ..., "b": ...}}`` for conv and
+        dense nodes (``b`` only where the node wants one), or — for
+        graphs lowered from ``ConvGraph.chain`` — the legacy list of
+        one ``(w, bias)`` pair per conv node in graph order.  No plan()
         resolution happens here — the program was resolved up front.
         """
-        if len(weights) != len(self.graph):
-            raise ValueError(f"graph has {len(self.graph)} nodes but got "
-                             f"{len(weights)} weight pairs")
-        for i, (p, (w, b)) in enumerate(zip(self.node_plans, weights)):
-            x = self._node_fn(i)(x, w, b if p.spec.has_bias else None)
-        return x
+        params = self._named_params(params)
+        from repro.kernels import ops
+        values = {self.graph.input_name: x}
+        for node in self.graph.nodes:
+            ins = [values[e] for e in node.inputs]
+            if isinstance(node, ConvOp):
+                p = self._node_params(params, node, node.spec.has_bias)
+                y = self._node_fn(node.name)(
+                    ins[0], p["w"], p["b"] if node.spec.has_bias else None)
+            elif isinstance(node, PoolOp):
+                y = ops.pool2d(ins[0], node.kind, node.window,
+                               node.stride, node.padding)
+            elif isinstance(node, AddOp):
+                y = ins[0]
+                for other in ins[1:]:
+                    y = y + other
+                if node.activation == "relu":
+                    y = jax.nn.relu(y)
+            elif isinstance(node, ConcatOp):
+                y = jnp.concatenate(ins, axis=-1)
+            elif isinstance(node, GapOp):
+                y = ins[0].mean(axis=(1, 2))
+            elif isinstance(node, DenseOp):
+                p = self._node_params(params, node, node.bias)
+                y = ins[0] @ p["w"]
+                if node.bias:
+                    y = y + p["b"]
+            else:
+                raise TypeError(f"unknown IR node type {type(node)}")
+            values[node.name] = y
+        return values[self.graph.output]
 
     # -- warmup / autotune ----------------------------------------------
     def warmup(self, *, measure: bool = False, repeats: int = 3) -> Dict:
-        """Compile (and optionally measure-autotune) every node, one sweep.
+        """Compile (and optionally measure-autotune) every conv node in
+        one sweep.
 
         ``measure=True`` runs the exhaustive per-node timing sweep
-        (``autotune.measure_algorithm`` with the node's epilogue threaded
-        through), re-resolves each node against the freshly persisted
-        winners, and re-persists the graph-level entry — after which the
-        plan serves inference with zero further plan() resolutions.
+        (``autotune.measure_algorithm`` with the node's epilogue and
+        groups threaded through), re-resolves each conv node against the
+        freshly persisted winners, and re-persists the graph-level entry
+        — after which the plan serves inference with zero further plan()
+        resolutions.
 
-        Returns ``{"nodes": [...], "total_ms": float}`` with per-node
-        algorithm/source/compile-time rows.
+        Returns ``{"nodes": [...], "total_ms": float}`` with one
+        algorithm/source/compile-time row per conv node.
         """
         from repro.core import autotune
         if measure and self.backend != jax.default_backend():
@@ -174,9 +638,9 @@ class GraphPlan:
                 f"{jax.default_backend()!r}")
         t_start = time.perf_counter()
         if measure:
-            new_plans: List[ConvPlan] = []
-            for p in self.node_plans:
-                s = p.spec
+            new_plans: Dict[str, ConvPlan] = {}
+            for node in self.graph.conv_nodes:
+                s = node.spec
                 dtype = jnp.dtype(s.dtype)
                 autotune.measure_algorithm(
                     jnp.zeros(s.in_shape, dtype),
@@ -184,22 +648,24 @@ class GraphPlan:
                     stride=s.stride, padding=s.padding, repeats=repeats,
                     bias=(jnp.zeros((s.filter_shape[3],), dtype)
                           if s.has_bias else None),
-                    activation="relu" if s.wants_relu else None)
-                new_plans.append(plan(s, backend=self.backend))  # the winner
-            self.node_plans = tuple(new_plans)
+                    activation="relu" if s.wants_relu else None,
+                    groups=s.groups)
+                new_plans[node.name] = plan(s, backend=self.backend)
+            self.conv_plans = new_plans
             self._jitted.clear()        # stale traces must not serve on
-            _persist(self.graph, self.backend, self.node_plans)
+            _persist(self.graph, self.backend, self.conv_plans)
         rows = []
-        for i, p in enumerate(self.node_plans):
+        for node in self.graph.conv_nodes:
+            p = self.conv_plans[node.name]
             s = p.spec
             dtype = jnp.dtype(s.dtype)
             x = jnp.zeros(s.in_shape, dtype)
             w = jnp.zeros(s.filter_shape, dtype)
             b = jnp.zeros((s.filter_shape[3],), dtype) if s.has_bias else None
             t0 = time.perf_counter()
-            self._node_fn(i)(x, w, b).block_until_ready()
-            rows.append({"key": s.key(), "algorithm": p.algorithm,
-                         "source": p.source,
+            self._node_fn(node.name)(x, w, b).block_until_ready()
+            rows.append({"node": node.name, "key": s.key(),
+                         "algorithm": p.algorithm, "source": p.source,
                          "compile_ms": (time.perf_counter() - t0) * 1e3})
         return {"nodes": rows,
                 "total_ms": (time.perf_counter() - t_start) * 1e3}
@@ -208,54 +674,66 @@ class GraphPlan:
 # ---------------------------------------------------------------------------
 # resolution + persisted graph-level cache
 
-def plan_graph(graph: ConvGraph, *, backend: Optional[str] = None,
+def plan_graph(graph: GraphLike, *, backend: Optional[str] = None,
                force: Optional[str] = None,
                use_cache: bool = True) -> GraphPlan:
     """Resolve a whole-network plan once.
 
-    Forced plans bypass the persisted cache in both directions (they are
-    a debugging/benchmark tool, not a deployment choice).  Otherwise a
-    persisted entry keyed by backend + graph signature reconstructs the
-    program with zero per-node plan() resolutions; entries naming
-    unknown or no-longer-supported algorithms are dropped and re-solved.
+    Accepts the IR (``Graph``) or the compatibility chain
+    (``ConvGraph``, lowered via ``to_ir``).  Forced plans bypass the
+    persisted cache in both directions (they are a debugging/benchmark
+    tool, not a deployment choice).  Otherwise a persisted entry keyed
+    by backend + graph signature reconstructs the program with zero
+    per-node plan() resolutions; entries that are unversioned, carry a
+    foreign schema, or name unknown / no-longer-supported algorithms
+    are dropped and re-resolved.
     """
+    ir = _as_ir(graph)
     backend = backend or jax.default_backend()
     if force is not None:
-        plans = tuple(plan(s, force=force, backend=backend)
-                      for s in graph.nodes)
-        return GraphPlan(graph, plans, backend, "forced")
+        plans = {n.name: plan(n.spec, force=force, backend=backend)
+                 for n in ir.conv_nodes}
+        return GraphPlan(ir, plans, backend, "forced")
     if use_cache:
-        cached = _plans_from_cache(graph, backend)
+        cached = _plans_from_cache(ir, backend)
         if cached is not None:
-            return GraphPlan(graph, cached, backend, "graph_cache")
-    plans = tuple(plan(s, backend=backend) for s in graph.nodes)
+            return GraphPlan(ir, cached, backend, "graph_cache")
+    plans = {n.name: plan(n.spec, backend=backend) for n in ir.conv_nodes}
     if use_cache:       # use_cache=False means no cache interaction AT ALL
-        _persist(graph, backend, plans)
-    return GraphPlan(graph, plans, backend, "resolved")
+        _persist(ir, backend, plans)
+    return GraphPlan(ir, plans, backend, "resolved")
 
 
-def _graph_key(graph: ConvGraph, backend: str) -> str:
+def _graph_key(graph: GraphLike, backend: str) -> str:
     return f"{backend}/{graph.signature()}"
 
 
-def _persist(graph: ConvGraph, backend: str,
-             plans: Sequence[ConvPlan]) -> None:
+def _persist(graph: Graph, backend: str,
+             plans: Mapping[str, ConvPlan]) -> None:
     _STORE.put(_graph_key(graph, backend),
-               {"algorithms": [p.algorithm for p in plans]})
+               {"schema": GRAPH_SCHEMA,
+                "algorithms": {name: p.algorithm
+                               for name, p in plans.items()}})
 
 
-def _plans_from_cache(graph: ConvGraph,
-                      backend: str) -> Optional[Tuple[ConvPlan, ...]]:
+def _plans_from_cache(graph: Graph,
+                      backend: str) -> Optional[Dict[str, ConvPlan]]:
     from repro.core import autotune
     from repro.core.cuconv import ALGORITHMS
     entry = _STORE.get(_graph_key(graph, backend))
     if not isinstance(entry, dict):
         return None
+    if entry.get("schema") != GRAPH_SCHEMA:
+        return None       # unversioned / foreign-schema entry: never decode
     algos = entry.get("algorithms")
-    if not isinstance(algos, list) or len(algos) != len(graph.nodes):
+    conv_nodes = graph.conv_nodes
+    if (not isinstance(algos, dict)
+            or set(algos) != {n.name for n in conv_nodes}):
         return None
-    plans = []
-    for spec, algo in zip(graph.nodes, algos):
+    plans: Dict[str, ConvPlan] = {}
+    for node in conv_nodes:
+        algo = algos[node.name]
+        spec = node.spec
         if algo not in ALGORITHMS or not supports(algo, spec)[0]:
             return None                 # stale entry: caller re-resolves
         # a measured winner recorded since this entry was persisted must
@@ -265,6 +743,6 @@ def _plans_from_cache(graph: ConvGraph,
         if (measured is not None and measured != algo
                 and supports(measured, spec)[0]):
             return None
-        plans.append(ConvPlan(spec, algo, "graph_cache",
-                              "persisted graph-level plan", backend))
-    return tuple(plans)
+        plans[node.name] = ConvPlan(spec, algo, "graph_cache",
+                                    "persisted graph-level plan", backend)
+    return plans

@@ -70,6 +70,27 @@ def cuconv_fused(x, w, padding=(0, 0), stride=1, bias=None, activation=None,
                             interpret=_auto_interpret(interpret))
 
 
+def pool2d(x, kind="max", window=(2, 2), stride=(2, 2), padding=(0, 0)):
+    """Windowed max/avg pooling over NHWC (the graph IR's pool executor).
+
+    Avg pooling divides by the full window size (padding counts as
+    zeros), matching ``lax.avg_pool``-style count_include_pad semantics.
+    """
+    kh, kw = window
+    sh, sw = stride
+    ph, pw = padding
+    dims, strides = (1, kh, kw, 1), (1, sh, sw, 1)
+    pads = ((0, 0), (ph, ph), (pw, pw), (0, 0))
+    if kind == "max":
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                     dims, strides, pads)
+    if kind == "avg":
+        s = jax.lax.reduce_window(x, jnp.zeros((), x.dtype), jax.lax.add,
+                                  dims, strides, pads)
+        return s / (kh * kw)
+    raise ValueError(f"pool kind must be 'max' or 'avg'; got {kind!r}")
+
+
 def conv1d_causal(x, w, b=None, interpret=None):
     return _c1d.conv1d_tap(x, w, b, interpret=_auto_interpret(interpret))
 

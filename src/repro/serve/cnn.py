@@ -3,7 +3,11 @@
 The LM engine (serve/engine.py) keeps its compiled surface to two jitted
 functions over fixed shapes; this engine applies the same discipline to
 CNN inference traffic: the ONLY compiled programs are one jitted
-whole-network GraphPlan execution per configured batch *bucket*.
+whole-network GraphPlan execution per configured batch *bucket*.  Any
+model exposing ``graph_plan``/``apply`` over the operator IR plugs in —
+including the real network shapes (``resnet_like`` residual blocks,
+``mobilenet_like`` depthwise stages, ``fire_like`` concats) whose whole
+forward pass, head included, is one planned program.
 Incoming image requests (each carrying one image or a small batch) are
 flattened into per-image units and multiplexed onto the largest bucket
 that fits the remaining queue — short remainders ride the smallest

@@ -70,10 +70,10 @@ def test_graph_cache_roundtrip_zero_replans():
     assert gp1.source == "resolved"
     assert g._STORE.path().exists()
     g.clear_cache()                       # simulate a fresh process
-    before = cs.PLAN_STATS["resolutions"]
+    cs.reset_plan_stats()
     gp2 = g.plan_graph(gph)
     assert gp2.source == "graph_cache"
-    assert cs.PLAN_STATS["resolutions"] == before
+    assert cs.PLAN_STATS["resolutions"] == 0
     assert ([p.algorithm for p in gp2.node_plans]
             == [p.algorithm for p in gp1.node_plans])
     assert all(p.source == "graph_cache" for p in gp2.node_plans)
@@ -158,10 +158,10 @@ def test_planned_once_then_zero_replans(rng):
     x = jnp.asarray(rng.normal(size=(1, 32, 32, 3)), jnp.float32)
     gp = model.graph_plan((1, 32, 32, 3))
     gp.warmup()
-    before = cs.PLAN_STATS["resolutions"]
+    cs.reset_plan_stats()
     for _ in range(3):
         y = model.apply(params, x)        # eager: re-enters apply each time
-    assert cs.PLAN_STATS["resolutions"] == before
+    assert cs.PLAN_STATS["resolutions"] == 0
     np.testing.assert_allclose(
         np.asarray(y), np.asarray(_lax_model_ref(model, params, x)),
         rtol=3e-4, atol=3e-4)
@@ -195,9 +195,9 @@ def test_serve_mixed_stream_buckets_and_outputs(rng):
         for i, n in enumerate(sizes)]
     for r in reqs:
         eng.submit(r)
-    before = cs.PLAN_STATS["resolutions"]
+    cs.reset_plan_stats()
     done = eng.run()
-    assert cs.PLAN_STATS["resolutions"] == before    # warm engine: no re-plans
+    assert cs.PLAN_STATS["resolutions"] == 0    # warm engine: no re-plans
     assert len(done) == len(sizes) and all(r.done for r in done)
     assert set(eng.compiled_buckets) <= set(eng.buckets)
     assert eng.stats["images"] == sum(sizes)

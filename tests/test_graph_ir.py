@@ -1,0 +1,392 @@
+"""Typed operator-IR graph API: DAG validation, whole-network numerics
+(residual / pool / concat / grouped conv / head), schema-versioned cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import convspec as cs
+from repro.core import cuconv as cc
+from repro.core import graph as g
+from repro.core.graph import (AddOp, ConcatOp, ConvOp, DenseOp, GapOp,
+                              Graph, GraphBuilder, PoolOp)
+from repro.models.cnn import fire_like, mobilenet_like, resnet_like
+from repro.serve.cnn import CnnServeEngine, ImageRequest
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_caches(tmp_path, monkeypatch):
+    """Point both persisted plan stores (autotune.json, graphplans.json)
+    at an empty per-test dir so other runs on this machine can't leak."""
+    from repro.core import autotune
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    autotune.clear_cache()
+    g.clear_cache()
+    yield
+    autotune.clear_cache()
+    g.clear_cache()
+
+
+def _spec(in_shape, k, m, stride=1, epilogue="none", groups=1):
+    c = in_shape[3]
+    return cs.ConvSpec(in_shape, (k, k, c // groups, m),
+                       (stride, stride), ((k - 1) // 2,) * 2,
+                       "float32", epilogue, groups)
+
+
+# ---------------------------------------------------------------------------
+# DAG construction / shape validation
+
+def test_graph_rejects_duplicate_node_name():
+    spec = _spec((1, 8, 8, 3), 3, 4)
+    with pytest.raises(ValueError, match="duplicate"):
+        Graph((ConvOp("a", ("input",), spec),
+               GapOp("a", ("a",))), (1, 8, 8, 3))
+
+
+def test_graph_rejects_undefined_and_forward_edges():
+    spec = _spec((1, 8, 8, 3), 3, 4)
+    with pytest.raises(ValueError, match="undefined edge"):
+        Graph((ConvOp("a", ("ghost",), spec),), (1, 8, 8, 3))
+    # a forward reference is the same error: nodes are topologically
+    # ordered by construction, so cycles cannot be expressed at all
+    with pytest.raises(ValueError, match="undefined edge"):
+        Graph((AddOp("sum", ("a", "sum")),
+               ConvOp("a", ("input",), spec)), (1, 8, 8, 3))
+
+
+def test_graph_rejects_shape_mismatches():
+    b = GraphBuilder((1, 8, 8, 3))
+    y = b.conv("c1", "input", 3, 4)
+    z = b.conv("c2", y, 3, 8)                 # different channel count
+    with pytest.raises(ValueError, match="add node"):
+        b.add("bad", (y, z))
+    with pytest.raises(ValueError, match="expects input shape"):
+        Graph((ConvOp("c", ("input",), _spec((1, 4, 4, 3), 3, 4)),),
+              (1, 8, 8, 3))
+    with pytest.raises(ValueError, match="dense node"):
+        b2 = GraphBuilder((1, 8, 8, 3))
+        gp = b2.gap("g", "input")
+        b2.nodes.append(DenseOp("d", (gp,), (99, 5)))
+        b2.graph()
+
+
+def test_graph_rejects_bad_concat_and_pool():
+    b = GraphBuilder((1, 8, 8, 3))
+    a = b.conv("a", "input", 3, 4)
+    d = b.conv("d", "input", 3, 4, stride=2)  # halved spatial dims
+    with pytest.raises(ValueError, match="concat node"):
+        b.concat("cat", (a, d))
+    with pytest.raises(ValueError, match="empty"):
+        b.pool("p", a, window=16)
+    with pytest.raises(ValueError, match="kind"):
+        PoolOp("p", ("input",), "median")
+
+
+def test_graph_output_selection_and_properties():
+    b = GraphBuilder((2, 8, 8, 3))
+    y = b.conv("c1", "input", 3, 4)
+    b.gap("gap", y)
+    gph = b.graph(output="c1")
+    assert gph.output == "c1"
+    assert gph.out_shape == (2, 8, 8, 4)
+    assert [n.name for n in gph.conv_nodes] == ["c1"]
+    with pytest.raises(ValueError, match="not a node"):
+        b.graph(output="input")
+    with pytest.raises(ValueError, match="not a node"):
+        b.graph(output="nope")
+
+
+def test_signature_is_schema_versioned_and_structure_sensitive():
+    def build(activation):
+        b = GraphBuilder((1, 8, 8, 3))
+        y = b.conv("c1", "input", 3, 4, epilogue="bias")
+        b.add("sum", (y, y), activation=activation)
+        return b.graph()
+    assert build("relu").signature() == build("relu").signature()
+    assert build("relu").signature() != build("none").signature()
+    blob = "|".join([f"v{g.GRAPH_SCHEMA}", f"in{(1, 8, 8, 3)}",
+                     "out:sum"] + [n.descriptor()
+                                   for n in build("relu").nodes])
+    import hashlib
+    assert build("relu").signature() == hashlib.sha1(
+        blob.encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# IR execution numerics vs a plain-lax reference
+
+def _cb(p, x, stride=1, relu=True, groups=1):
+    """conv + bias (+ relu) reference, library kernels only."""
+    y = cc.conv_lax(x, p["w"], stride, "same", groups=groups) + p["b"]
+    return jax.nn.relu(y) if relu else y
+
+
+def _maxpool_ref(x, k=2, s=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+def _avgpool_ref(x, k=2, s=2):
+    return jax.lax.reduce_window(x, jnp.zeros((), x.dtype), jax.lax.add,
+                                 (1, k, k, 1), (1, s, s, 1),
+                                 "VALID") / (k * k)
+
+
+def test_residual_add_graph_matches_lax(rng):
+    b = GraphBuilder((2, 10, 10, 3))
+    y = b.conv("stem", "input", 3, 6)
+    z = b.conv("c1", y, 3, 6)
+    z = b.conv("c2", z, 3, 6, epilogue="bias")
+    b.add("sum", (y, z), activation="relu")
+    gp = g.plan_graph(b.graph())
+    params = {n.name: {"w": jnp.asarray(
+        rng.normal(size=n.spec.filter_shape), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(n.spec.filter_shape[3],)),
+                         jnp.float32)}
+        for n in gp.graph.conv_nodes}
+    x = jnp.asarray(rng.normal(size=(2, 10, 10, 3)), jnp.float32)
+    got = gp.run(x, params)
+    stem = _cb(params["stem"], x)
+    want = jax.nn.relu(stem + _cb(params["c2"],
+                                  _cb(params["c1"], stem), relu=False))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_concat_graph_matches_lax(rng):
+    b = GraphBuilder((1, 8, 8, 4))
+    s = b.conv("squeeze", "input", 1, 3)
+    e1 = b.conv("e1", s, 1, 5)
+    e3 = b.conv("e3", s, 3, 5)
+    b.concat("cat", (e1, e3))
+    gp = g.plan_graph(b.graph())
+    params = {n.name: {"w": jnp.asarray(
+        rng.normal(size=n.spec.filter_shape), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(n.spec.filter_shape[3],)),
+                         jnp.float32)}
+        for n in gp.graph.conv_nodes}
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 4)), jnp.float32)
+    got = gp.run(x, params)
+    sq = _cb(params["squeeze"], x)
+    want = jnp.concatenate([_cb(params["e1"], sq),
+                            _cb(params["e3"], sq)], axis=-1)
+    assert got.shape == (1, 8, 8, 10)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_pool_nodes_match_reduce_window(rng):
+    b = GraphBuilder((2, 12, 12, 5))
+    m = b.pool("mx", "input", kind="max", window=2)
+    b.pool("av", m, kind="avg", window=3, stride=1, padding=1)
+    gp = g.plan_graph(b.graph())
+    x = jnp.asarray(rng.normal(size=(2, 12, 12, 5)), jnp.float32)
+    got = gp.run(x, {})
+    want = jax.lax.reduce_window(
+        _maxpool_ref(x), jnp.zeros(()), jax.lax.add,
+        (1, 3, 3, 1), (1, 1, 1, 1),
+        ((0, 0), (1, 1), (1, 1), (0, 0))) / 9
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_run_rejects_missing_bias(rng):
+    b = GraphBuilder((1, 6, 6, 3))
+    b.conv("c", "input", 3, 4)                # bias_relu epilogue
+    gp = g.plan_graph(b.graph())
+    x = jnp.zeros((1, 6, 6, 3), jnp.float32)
+    with pytest.raises(ValueError, match="bias"):
+        gp.run(x, {"c": {"w": jnp.zeros((3, 3, 3, 4))}})
+
+
+def test_explain_covers_every_ir_node_kind(rng):
+    model = resnet_like()
+    gp = model.graph_plan((1, 32, 32, 3))
+    txt = gp.explain()
+    assert len(txt.splitlines()) == len(gp.graph) + 1
+    for name in ("stem", "pool", "b1add", "gap", "head"):
+        assert name in txt
+    mob = mobilenet_like().graph_plan((1, 32, 32, 3))
+    assert " g16 " in mob.explain()           # depthwise marker
+
+
+# ---------------------------------------------------------------------------
+# whole real networks: one planned program end to end
+
+def _resnet_ref(params, x):
+    y = _cb(params["stem"], x)
+    y = _maxpool_ref(y)
+    z = _cb(params["b1c2"], _cb(params["b1c1"], y), relu=False)
+    y = jax.nn.relu(y + z)
+    z = _cb(params["b2c2"], _cb(params["b2c1"], y, stride=2), relu=False)
+    p = _cb(params["b2proj"], y, stride=2, relu=False)
+    y = jax.nn.relu(p + z)
+    y = y.mean(axis=(1, 2))
+    return y @ params["head"]["w"] + params["head"]["b"]
+
+
+def _mobilenet_ref(params, x):
+    y = _cb(params["stem"], x, stride=2)
+    y = _cb(params["dw1"], y, groups=16)
+    y = _cb(params["pw1"], y)
+    y = _cb(params["dw2"], y, stride=2, groups=32)
+    y = _cb(params["pw2"], y)
+    y = y.mean(axis=(1, 2))
+    return y @ params["head"]["w"] + params["head"]["b"]
+
+
+def _fire_ref(params, x):
+    y = _cb(params["stem"], x, stride=2)
+    sq = _cb(params["squeeze"], y)
+    y = jnp.concatenate([_cb(params["expand1"], sq),
+                         _cb(params["expand3"], sq)], axis=-1)
+    y = _avgpool_ref(y)
+    y = y.mean(axis=(1, 2))
+    return y @ params["head"]["w"] + params["head"]["b"]
+
+
+@pytest.mark.parametrize("mk,ref", [(resnet_like, _resnet_ref),
+                                    (mobilenet_like, _mobilenet_ref),
+                                    (fire_like, _fire_ref)])
+def test_model_forward_matches_lax_reference(rng, mk, ref):
+    model = mk(num_classes=5)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, 32, 32, 3)), jnp.float32)
+    y = jax.jit(lambda p, xx: model.apply(p, xx))(params, x)
+    assert y.shape == (2, 5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref(params, x)),
+                               rtol=3e-4, atol=3e-4, err_msg=model.name)
+
+
+@pytest.mark.parametrize("mk", [resnet_like, mobilenet_like])
+def test_acceptance_whole_network_planned_once(rng, mk):
+    """Acceptance: residual add, pooling, depthwise/grouped convs and
+    the head all execute inside ONE GraphPlan program — zero plan()
+    resolutions after warmup."""
+    model = mk()
+    params = model.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(1, 32, 32, 3)), jnp.float32)
+    gp = model.graph_plan((1, 32, 32, 3))
+    gp.warmup()
+    cs.reset_plan_stats()
+    for _ in range(3):
+        y = model.apply(params, x)            # eager: re-enters apply
+    assert cs.PLAN_STATS["resolutions"] == 0
+    assert y.shape == (1, 10)
+
+
+def test_mobilenet_grouped_nodes_planned_via_feature_group_count():
+    model = mobilenet_like()
+    gp = model.graph_plan((1, 32, 32, 3))
+    dw = {n.name: gp.conv_plans[n.name] for n in gp.graph.conv_nodes
+          if n.spec.groups != 1}
+    assert set(dw) == {"dw1", "dw2"}
+    for name, p in dw.items():
+        assert p.algorithm == "lax", name
+        assert f"-g{p.spec.groups}" in p.spec.key()
+
+
+def test_serve_engine_over_resnet_like(rng):
+    """The IR program is bucketable: a mixed request stream served
+    through CnnServeEngine matches the reference with zero re-plans."""
+    model = resnet_like(num_classes=4)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = CnnServeEngine(model, params, (32, 32, 3), buckets=(1, 2))
+    eng.warmup()
+    reqs = [ImageRequest(rid=i, images=rng.normal(
+        size=(n, 32, 32, 3)).astype(np.float32))
+        for i, n in enumerate([1, 3, 2])]
+    for r in reqs:
+        eng.submit(r)
+    cs.reset_plan_stats()
+    done = eng.run()
+    assert cs.PLAN_STATS["resolutions"] == 0
+    for r in done:
+        for i in range(r.images.shape[0]):
+            want = _resnet_ref(params, jnp.asarray(r.images[i:i + 1]))
+            np.testing.assert_allclose(r.out[i], np.asarray(want)[0],
+                                       rtol=3e-4, atol=3e-4,
+                                       err_msg=f"req {r.rid} image {i}")
+
+
+# ---------------------------------------------------------------------------
+# schema-versioned persisted cache
+
+def _tiny_ir():
+    b = GraphBuilder((1, 8, 8, 3))
+    y = b.conv("stem", "input", 3, 4)
+    z = b.conv("c1", y, 3, 4, epilogue="bias")
+    b.add("sum", (y, z), activation="relu")
+    return b.graph()
+
+
+def test_ir_cache_roundtrip_zero_resolutions():
+    gph = _tiny_ir()
+    gp1 = g.plan_graph(gph)
+    assert gp1.source == "resolved"
+    entry = g._STORE.get(g._graph_key(gph, gp1.backend))
+    assert entry["schema"] == g.GRAPH_SCHEMA
+    assert set(entry["algorithms"]) == {"stem", "c1"}     # keyed by name
+    g.clear_cache()                        # simulate a fresh process
+    cs.reset_plan_stats()
+    gp2 = g.plan_graph(gph)
+    assert gp2.source == "graph_cache"
+    assert cs.PLAN_STATS["resolutions"] == 0
+    assert {n: p.algorithm for n, p in gp2.conv_plans.items()} == \
+        {n: p.algorithm for n, p in gp1.conv_plans.items()}
+
+
+@pytest.mark.parametrize("entry", [
+    {"algorithms": ["lax", "lax"]},                      # v1 positional
+    {"schema": 99, "algorithms": {"stem": "lax", "c1": "lax"}},
+    {"schema": 2, "algorithms": {"stem": "lax"}},        # wrong node set
+    {"schema": 2, "algorithms": {"stem": "lax", "c1": "conv9000"}},
+    ["lax", "lax"],
+])
+def test_unversioned_or_mismatched_cache_entries_dropped(entry):
+    """IR-era decoding must never misread legacy positional entries (or
+    vice versa): anything without the exact current schema re-resolves."""
+    gph = _tiny_ir()
+    backend = jax.default_backend()
+    g._STORE.put(g._graph_key(gph, backend), entry)
+    gp = g.plan_graph(gph)
+    assert gp.source == "resolved"
+    # and the re-resolve re-persisted a current-schema entry
+    assert g._STORE.get(g._graph_key(gph, backend))["schema"] == \
+        g.GRAPH_SCHEMA
+
+
+def test_chain_per_layer_epilogues():
+    """A classifier chain can plan its last conv as plain `bias` while
+    hidden layers keep bias_relu (and lowering preserves it)."""
+    layers = [(3, 3, 8, 1), (1, 1, 5, 1)]
+    gph = g.ConvGraph.chain(layers, (1, 8, 8, 3),
+                            epilogue=("bias_relu", "bias"))
+    assert [s.epilogue for s in gph.nodes] == ["bias_relu", "bias"]
+    ir = gph.to_ir()
+    assert [n.spec.epilogue for n in ir.conv_nodes] == ["bias_relu", "bias"]
+    with pytest.raises(ValueError, match="epilogue sequence"):
+        g.ConvGraph.chain(layers, (1, 8, 8, 3), epilogue=("bias",))
+
+
+def test_chain_and_ir_share_cache_namespace():
+    """ConvGraph.chain callers and IR callers hit the SAME persisted
+    entry: the chain's signature is its lowered IR's signature."""
+    layers = [(3, 3, 4, 1)]
+    chain = g.ConvGraph.chain(layers, (1, 8, 8, 3))
+    assert chain.signature() == chain.to_ir().signature()
+    g.plan_graph(chain)
+    g.clear_cache()
+    cs.reset_plan_stats()
+    gp = g.plan_graph(chain.to_ir())
+    assert gp.source == "graph_cache"
+    assert cs.PLAN_STATS["resolutions"] == 0
+
+
+def test_reset_plan_stats_helper():
+    cs.plan(cs.ConvSpec((1, 4, 4, 2), (1, 1, 2, 2)))
+    assert cs.PLAN_STATS["resolutions"] > 0
+    discarded = cs.reset_plan_stats()
+    assert discarded > 0
+    assert cs.PLAN_STATS["resolutions"] == 0
