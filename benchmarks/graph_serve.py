@@ -10,7 +10,11 @@ alongside the per-layer plan table the per-call benchmarks print.
 The IR-era models (resnet_like with residual adds + pooling,
 mobilenet_like with depthwise/grouped stages) run the same steady-state
 sweep: their ENTIRE forward pass is one planned program, so the rows
-are directly comparable.
+are directly comparable.  Every row carries a ``dtype=`` column; the IR
+models run under both the fp32 default and ``PrecisionPolicy("bf16")``
+(fp32 master params, fp32 accumulation, precision-distinct plan-cache
+keys), so the reduced-precision deployment story is benchmarked on the
+same programs.
 """
 from __future__ import annotations
 
@@ -38,13 +42,13 @@ def run(quick=True):
         stats = gp.warmup()
         algos = ",".join(sorted({r["algorithm"] for r in stats["nodes"]}))
         rows.append(csv_row(f"graph/warmup_b{b}", stats["total_ms"] * 1e3,
-                            f"nodes={len(stats['nodes'])} source={gp.source} "
-                            f"algos={algos}"))
+                            f"dtype=float32 nodes={len(stats['nodes'])} "
+                            f"source={gp.source} algos={algos}"))
         fn = jax.jit(lambda p, x, gp=gp: model.apply(p, x, graph_plan=gp))
         x = jnp.asarray(rng.normal(size=(b, HW, HW, C)), jnp.float32)
         us = time_fn(fn, params, x, repeats=3, warmup=1)
         rows.append(csv_row(f"graph/steady_b{b}", us,
-                            f"per_image_us={us / b:.1f}"))
+                            f"dtype=float32 per_image_us={us / b:.1f}"))
 
     eng = CnnServeEngine(model, params, (HW, HW, C), buckets=buckets)
     eng.warmup()
@@ -60,25 +64,34 @@ def run(quick=True):
     used = {b: n for b, n in eng.stats["batches"].items() if n}
     rows.append(csv_row(
         "graph/serve_stream", total_us,
-        f"images={eng.stats['images']} batches={sum(used.values())} "
+        f"dtype=float32 images={eng.stats['images']} "
+        f"batches={sum(used.values())} "
         f"buckets_used={len(used)}/{len(eng.buckets)} "
         f"padded={eng.stats['padded_slots']} "
         f"per_image_us={total_us / max(eng.stats['images'], 1):.1f}"))
 
-    # IR models: residual / pool / depthwise forward passes as ONE program
+    # IR models: residual / pool / depthwise forward passes as ONE
+    # program, under both the fp32 default and the bf16 precision policy
     for mk in ((resnet_like,) if quick else (resnet_like, mobilenet_like)):
         m = mk()
         p = m.init(jax.random.PRNGKey(0))
-        gp = m.graph_plan((1, HW, HW, C))
-        stats = gp.warmup()
-        algos = ",".join(sorted({r["algorithm"] for r in stats["nodes"]}))
-        rows.append(csv_row(
-            f"graph/{m.name}_warmup", stats["total_ms"] * 1e3,
-            f"ir_nodes={len(gp.graph)} convs={len(stats['nodes'])} "
-            f"source={gp.source} algos={algos}"))
-        fn = jax.jit(lambda pp, x, gp=gp, m=m: m.apply(pp, x, graph_plan=gp))
-        x = jnp.asarray(rng.normal(size=(1, HW, HW, C)), jnp.float32)
-        us = time_fn(fn, p, x, repeats=3, warmup=1)
-        rows.append(csv_row(f"graph/{m.name}_steady_b1", us,
-                            f"whole-network program (pool/add/head inside)"))
+        for precision in (None, "bf16"):
+            gp = m.graph_plan((1, HW, HW, C), precision=precision)
+            dtype = gp.graph.conv_nodes[0].spec.dtype
+            stats = gp.warmup()
+            algos = ",".join(sorted({r["algorithm"]
+                                     for r in stats["nodes"]}))
+            rows.append(csv_row(
+                f"graph/{m.name}_warmup_{dtype}", stats["total_ms"] * 1e3,
+                f"dtype={dtype} ir_nodes={len(gp.graph)} "
+                f"convs={len(stats['nodes'])} source={gp.source} "
+                f"algos={algos}"))
+            fn = jax.jit(lambda pp, x, gp=gp, m=m: m.apply(
+                pp, x, graph_plan=gp))
+            x = jnp.asarray(rng.normal(size=(1, HW, HW, C)), jnp.float32)
+            us = time_fn(fn, p, x, repeats=3, warmup=1)
+            rows.append(csv_row(
+                f"graph/{m.name}_steady_b1_{dtype}", us,
+                f"dtype={dtype} whole-network program "
+                f"(pool/add/head inside)"))
     return rows

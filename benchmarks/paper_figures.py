@@ -47,7 +47,7 @@ def _bench_config(hw, k, M, C, batch, rng):
         "cuconv_two_stage": cc.conv_cuconv_two_stage,
     }
     if k == 3:
-        algos["winograd"] = cc.ALGORITHMS["winograd"]
+        algos["winograd"] = cc.conv_winograd_or_fallback
     times = {}
     for name, fn in algos.items():
         f = jax.jit(functools.partial(fn, stride=1, padding=pad))

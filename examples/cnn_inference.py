@@ -6,7 +6,9 @@ one warmup sweep), compares the planned program against the library
 convolution, serves a mixed-size request stream through the
 batch-bucketed CnnServeEngine — and then does the same for a
 ResNet-flavoured network whose residual adds, maxpool and dense head
-all execute inside the one planned program (the IR's reason to exist).
+all execute inside the one planned program (the IR's reason to exist),
+including a full bf16 pass under a graph-wide PrecisionPolicy (fp32
+master params, fp32 accumulation, precision-distinct plan caches).
 
   PYTHONPATH=src python examples/cnn_inference.py
 """
@@ -77,3 +79,31 @@ assert PLAN_STATS["resolutions"] == 0, "warm engine must never re-plan"
 print(f"resnet_like: served {eng.stats['images']} images through "
       f"{len(eng.compiled_buckets)} planned programs with zero plan() "
       f"resolutions")
+
+# ---------------------------------------------------------------------------
+# the same network under a graph-wide bf16 precision policy: every conv
+# node plans in bfloat16 (fp32 accumulation per the executors' declared
+# behavior), cache keys are dtype-distinct, params stay fp32
+bf_gp = resnet.graph_plan((1, 32, 32, 3), precision="bf16")
+assert bf_gp.graph.signature() != rgp.graph.signature()
+print("\n" + bf_gp.explain())
+bf_gp.warmup()
+y32 = resnet.apply(rparams, x32 := jnp.asarray(
+    rng.normal(size=(1, 32, 32, 3)), jnp.float32))
+ybf = resnet.apply(rparams, x32, precision="bf16")
+err = float(jnp.abs(y32 - ybf.astype(jnp.float32)).max())
+print(f"bf16 vs fp32 logits: max_err = {err:.2e} (bf16 tolerance)")
+assert err < 0.05, "bf16 path must stay within bf16 tolerance of fp32"
+
+bf_eng = CnnServeEngine(resnet, rparams, (32, 32, 3), buckets=(1, 4),
+                        precision="bf16")
+bf_eng.warmup()
+for i, n in enumerate([2, 1, 3]):
+    bf_eng.submit(ImageRequest(
+        rid=i, images=rng.normal(size=(n, 32, 32, 3)).astype(np.float32)))
+reset_plan_stats()
+bf_eng.run()
+assert PLAN_STATS["resolutions"] == 0
+print(f"resnet_like[bf16]: served {bf_eng.stats['images']} images through "
+      f"{len(bf_eng.compiled_buckets)} planned bf16 programs with zero "
+      f"plan() resolutions")

@@ -1,16 +1,17 @@
 """Quickstart: the cuConv public API in 30 lines.
 
-Runs one convolution through every algorithm (library baseline, explicit
-GEMM, the paper's two-stage cuConv, the fused beyond-paper variant, and
-the Pallas TPU kernel in interpret mode) and checks they agree; then uses
-the cuDNN-style per-layer autotuner.
+Runs one convolution through every registered executor (library
+baseline, explicit GEMM, the paper's two-stage cuConv, the fused
+beyond-paper variant, and the Pallas TPU kernel in interpret mode) and
+checks they agree; then uses the cuDNN-style per-layer autotuner.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import conv2d, ALGORITHMS
+from repro.core import conv2d
+from repro.core import executors
 from repro.core.autotune import select_algorithm, measure_algorithm
 
 rng = np.random.default_rng(0)
@@ -21,10 +22,10 @@ w = jnp.asarray(rng.normal(size=(1, 1, 832, 256)), jnp.float32)
 
 ref = conv2d(x, w, algorithm="lax")
 print(f"output shape: {ref.shape}")
-for name in ALGORITHMS:
+for name in executors.names():      # the registered executor menu
     out = conv2d(x, w, algorithm=name)
     err = float(jnp.abs(out - ref).max())
-    print(f"  {name:18s} max_err_vs_library = {err:.2e}")
+    print(f"  {name:24s} max_err_vs_library = {err:.2e}")
 
 heur = select_algorithm(x.shape, w.shape)
 best = measure_algorithm(x, w)

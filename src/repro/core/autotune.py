@@ -4,9 +4,9 @@ Mirrors the deployment behaviour the paper relies on ("most frameworks
 automatically select the best-performing convolution algorithm for each
 convolutional layer"):
 
-  * heuristic mode — ``convspec.heuristic_algorithm`` encodes the
-    paper's measured regions; ``select_algorithm`` is the back-compat
-    shape-tuple wrapper.
+  * heuristic mode — the registered executors' region claims
+    (``executors.negotiate``, the paper's measured regions);
+    ``select_algorithm`` is the back-compat shape-tuple wrapper.
   * measured mode — ``measure_algorithm`` times every viable candidate
     (compiled, synced) and records the winner keyed by
     ``(backend, ConvSpec.key())`` in a JSON cache under
@@ -25,8 +25,7 @@ from typing import Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core.convspec import (ConvPlan, ConvSpec, heuristic_algorithm,
-                                 supports)
+from repro.core.convspec import ConvPlan, ConvSpec, heuristic_algorithm
 from repro.core.plancache import JsonCache
 
 _STORE = JsonCache("autotune.json")
@@ -68,10 +67,10 @@ def select_algorithm(x_shape, w_shape, stride=1) -> str:
 
 
 def default_candidates(spec: ConvSpec) -> Sequence[str]:
-    """Every registered algorithm that can execute ``spec`` exactly —
+    """Every registered executor that can execute ``spec`` exactly —
     including the Pallas kernels this repo exists to showcase."""
-    from repro.core.cuconv import ALGORITHMS
-    return tuple(n for n in ALGORITHMS if supports(n, spec)[0])
+    from repro.core import executors
+    return executors.supporting(spec)
 
 
 def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
@@ -83,24 +82,33 @@ def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
     The cuDNN-style exhaustive search the paper used for its baselines;
     ``plan()`` serves the recorded winner to every later process.
 
-    ``candidates=None`` means all of ``ALGORITHMS`` filtered by
-    ``supports()`` — so the measured mode can pick the Pallas kernels,
-    not just the XLA family.  ``bias``/``activation`` ride into the
-    timed executions, so fused-epilogue paths are measured exactly as
-    they deploy (epilogue in-kernel on the fused Pallas path, XLA ops
-    elsewhere); the persisted key stays epilogue-insensitive.
+    ``candidates=None`` means every registered executor filtered by its
+    declared capabilities (dtype included) — so the measured mode can
+    pick the Pallas kernels, not just the XLA family, and a bf16 spec
+    only times executors that declare bf16.  ``bias``/``activation``
+    ride into the timed executions, so fused-epilogue paths are measured
+    exactly as they deploy (epilogue in-kernel on the fused Pallas path,
+    XLA ops elsewhere); the persisted key stays epilogue-insensitive
+    (but dtype-distinct: ConvSpec.key() carries the dtype).
     """
+    from repro.core import executors
     spec = ConvSpec.for_conv(x, w, stride, padding, bias=bias,
                              activation=activation, groups=groups)
     backend = jax.default_backend()
     hit = cached_best(spec, backend)
-    if hit is not None:
+    # a persisted winner only short-circuits the sweep while it is still
+    # a registered, capable executor — a stale entry (unregistered
+    # plugin, tightened VMEM budget) re-measures and gets overwritten
+    if hit is not None and executors.capable(hit, spec):
         return hit
     if candidates is None:
         candidates = default_candidates(spec)
     best, best_t = None, float("inf")
     for name in candidates:
-        if not supports(name, spec)[0]:
+        # unknown or incapable candidates are skipped, not fatal: an
+        # explicit candidate list may name a plugin this process never
+        # registered, and the sweep should still time the rest
+        if not executors.capable(name, spec):
             continue
         # time through a ConvPlan so the epilogue runs as deployed
         p = ConvPlan(spec, name, "candidate", "autotune timing", backend)
@@ -117,6 +125,10 @@ def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
             continue
         if t < best_t:
             best, best_t = name, t
-    best = best or "lax"
+    if best is None:
+        # nothing timed successfully: don't persist a fake "measured"
+        # winner — leave the planner on its heuristic/cost tiers and
+        # report what negotiation would run
+        return executors.negotiate(spec, backend)[0]
     record_best(spec, backend, best)
     return best

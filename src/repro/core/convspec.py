@@ -6,18 +6,22 @@ descriptor + planner, not a pile of per-call-site heuristics.  This
 module is that seam (DESIGN.md §4):
 
   ConvSpec   frozen descriptor of one convolution: shapes, stride,
-             padding, dtype, epilogue.  Hashable; the key for every
-             cache (measured autotune, serving plans).
-  plan()     the ONLY place algorithm choice lives.  Consults, in order:
-             a forced algorithm (with capability guards), the persisted
-             measured-autotune cache, and the paper's heuristic regions;
-             applies the fused-kernel VMEM budget fallback that used to
-             hide in kernels/ops.py.
+             padding, dtype, epilogue, groups.  Hashable; the key for
+             every cache (measured autotune, serving plans).
+  plan()     the ONLY place algorithm choice lives — and it is pure
+             capability negotiation over the executor registry
+             (core/executors.py): a forced executor (capability-
+             guarded), the persisted measured-autotune cache, the
+             registered executors' heuristic region claims, then the
+             cheapest supported executor by cost model.  No executor
+             name is special-cased here.
   ConvPlan   executable result: call it with (x, w, bias); `explain()`
-             returns a stable one-line story for benchmarks/debugging.
+             returns a stable one-line story (executor provenance +
+             dtype/accumulation) for benchmarks/debugging.
 
 Everything downstream (core.cuconv.conv2d, models.cnn, benchmarks,
-serve) routes through plan(); kernels/ops.py stays policy-free.
+serve) routes through plan(); kernels/ops.py stays policy-free, and
+capability rules live on the executors themselves (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -27,13 +31,27 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+# the single home of the padding type alias (cuconv re-exports it)
 Pad = Union[int, Tuple[int, int], str]
 
-# VMEM working-set budget for the fused Pallas kernel (per-core VMEM is
-# ~16 MB; leave headroom for Mosaic's own buffers)
-FUSED_VMEM_BUDGET = 12 * 1024 * 1024
-
 EPILOGUES = ("none", "bias", "relu", "bias_relu")
+
+# canonical short spellings for ConvSpec.dtype / PrecisionPolicy inputs
+_DTYPE_ALIASES = {"fp32": "float32", "f32": "float32",
+                  "bf16": "bfloat16", "bfloat16": "bfloat16",
+                  "float32": "float32"}
+
+
+def canonical_dtype(dtype) -> str:
+    """One canonical dtype string ('float32', 'bfloat16', ...) for any
+    accepted spelling ('bf16', jnp.bfloat16, np.dtype('float32'), ...)."""
+    alias = _DTYPE_ALIASES.get(str(dtype))
+    if alias is not None:
+        return alias
+    try:
+        return str(jnp.dtype(dtype).name)
+    except TypeError as e:
+        raise ValueError(f"unknown dtype {dtype!r}") from e
 
 
 def normalize_pad(padding: Pad, kh: int, kw: int) -> Tuple[int, int]:
@@ -76,7 +94,8 @@ def out_size(size: int, k: int, p: int, s: int) -> int:
     return (size + 2 * p - k) // s + 1
 
 
-# back-compat alias (pre-graph-API name)
+# back-compat alias (pre-graph-API name; the ONE declared home — other
+# modules import it rather than re-declaring)
 _norm_stride = normalize_stride
 
 
@@ -112,6 +131,8 @@ class ConvSpec:
         if len(self.padding) != 2 or any(p < 0 for p in self.padding):
             raise ValueError(f"padding must be a non-negative (ph, pw) "
                              f"pair; got {self.padding!r}")
+        # canonicalize dtype so 'bf16' and 'bfloat16' share cache keys
+        object.__setattr__(self, "dtype", canonical_dtype(self.dtype))
         if any(d <= 0 for d in self.out_shape):
             raise ValueError(f"spec produces non-positive output shape "
                              f"{self.out_shape}: input {self.in_shape}, "
@@ -167,8 +188,10 @@ class ConvSpec:
     def key(self) -> str:
         """Stable string key for persisted caches.
 
-        Ungrouped specs keep the historical key shape (no ``-g`` segment)
-        so pre-groups persisted autotune entries stay valid.
+        The dtype segment makes keys precision-distinct (a bf16 plan can
+        never serve an fp32 spec); ungrouped specs keep the historical
+        key shape (no ``-g`` segment) so pre-groups persisted autotune
+        entries stay valid.
         """
         n, h, w, c = self.in_shape
         kh, kw, _, m = self.filter_shape
@@ -179,88 +202,26 @@ class ConvSpec:
 
 
 # ---------------------------------------------------------------------------
-# capability / cost model
-
-def fused_vmem_bytes(spec: ConvSpec) -> int:
-    from repro.kernels.cuconv_fused import vmem_bytes
-    itemsize = jnp.dtype(spec.dtype).itemsize
-    return vmem_bytes(spec.in_shape, spec.filter_shape, pad=spec.padding,
-                      stride=spec.stride, itemsize=itemsize)
-
+# capability: a thin delegation to the executor registry (the rules
+# themselves live on the registered executors — DESIGN.md §8)
 
 def supports(algorithm: str, spec: ConvSpec) -> Tuple[bool, str]:
-    """Can `algorithm` execute `spec` exactly (ignoring speed)?"""
-    if spec.groups != 1:
-        # no dedicated grouped/depthwise kernel yet: only the library
-        # conv (feature_group_count) executes grouped specs exactly
-        if algorithm == "lax":
-            return True, (f"grouped conv (groups={spec.groups}): library "
-                          f"feature_group_count")
-        return False, (f"no grouped-conv support (groups={spec.groups}); "
-                       f"lax feature_group_count is the executor")
-    if algorithm == "cuconv_pallas":
-        if fused_vmem_bytes(spec) > FUSED_VMEM_BUDGET:
-            return False, (f"fused working set "
-                           f"{fused_vmem_bytes(spec) / 2**20:.1f} MB "
-                           f"> {FUSED_VMEM_BUDGET / 2**20:.0f} MB VMEM budget")
-        return True, "fused Pallas kernel fits VMEM"
-    if algorithm == "conv1x1_pallas":
-        if (not spec.is_1x1 or not spec.unit_stride
-                or spec.padding != (0, 0)):
-            return False, "conv1x1 kernel needs 1x1 filter, stride 1, pad 0"
-        return True, "1x1 GEMM kernel (all pixels MXU-tiled)"
-    if algorithm == "cuconv_two_stage_pallas" and not spec.unit_stride:
-        return False, "two-stage Pallas kernels are stride-1 only"
-    if algorithm == "winograd":
-        # executor falls back to lax internally for non-3x3; treat the
-        # non-Winograd region as unsupported so plans stay honest
-        if spec.filter_shape[:2] != (3, 3) or not spec.unit_stride:
-            return False, "Winograd F(2x2,3x3) needs 3x3 stride-1"
-        return True, "3x3 stride-1: Winograd region"
-    return True, "generic algorithm"
+    """Can `algorithm` execute `spec` exactly (ignoring speed)?
+
+    Back-compat wrapper over ``executors.get(algorithm).supports(spec)``.
+    """
+    from repro.core import executors
+    return executors.get(algorithm).supports(spec)
 
 
 def heuristic_algorithm(spec: ConvSpec, backend: str) -> Tuple[str, str]:
-    """The paper's empirical regions (figs 5-7), adapted per backend.
-
-    - 1x1 filters: cuConv's best region (single GEMM, no stage 2);
-    - small batch + small spatial: cuConv wins (its thread-level
-      parallelism advantage on GPU; on TPU the grid fills cores even at
-      batch 1);
-    - large 3x3 workloads: the library algorithm (Winograd's region in
-      the paper) keeps the edge;
-    - on TPU the fused Pallas kernel takes any region cuConv would,
-      including strided convs; elsewhere Pallas runs in interpret mode
-      (orders of magnitude slower), so XLA paths are chosen instead.
-    """
-    n, h, _, _ = spec.in_shape
-    kh, kw = spec.filter_shape[:2]
-    on_tpu = backend == "tpu"
-    if spec.groups != 1:
-        return "lax", (f"grouped conv (groups={spec.groups}): library "
-                       f"feature_group_count")
-    fused_ok, _ = supports("cuconv_pallas", spec)
-    if not spec.unit_stride:
-        if on_tpu and fused_ok:
-            return "cuconv_pallas", "strided conv: fused kernel on TPU"
-        return "lax", "strided conv: library kernel off-TPU"
-    if spec.is_1x1:
-        if on_tpu and spec.epilogue == "none" and supports(
-                "conv1x1_pallas", spec)[0]:
-            # no epilogue to fuse: the dedicated GEMM kernel tiles all
-            # N*H*W pixels onto the MXU (the fused kernel only fills
-            # OW rows per grid step)
-            return "conv1x1_pallas", "1x1: dedicated GEMM kernel"
-        if on_tpu and fused_ok:
-            return "cuconv_pallas", "1x1: fused GEMM + epilogue in VMEM"
-        return "cuconv", "1x1: single GEMM, no stage 2 (best region)"
-    if n == 1 or (h <= 14 and n <= 16):
-        if on_tpu and fused_ok:
-            return "cuconv_pallas", "small batch/spatial: cuConv region"
-        return "cuconv", "small batch/spatial: cuConv region"
-    if kh == 3 and kw == 3:
-        return "winograd", "large 3x3: Winograd region in the paper"
-    return "cuconv", "default cuConv region"
+    """The negotiated choice absent force/measurement: the executors'
+    paper-region claims (figs 5-7), else the cheapest supported
+    executor by cost model.  Back-compat wrapper over
+    ``executors.negotiate``."""
+    from repro.core import executors
+    name, _source, reason = executors.negotiate(spec, backend)
+    return name, reason
 
 
 # ---------------------------------------------------------------------------
@@ -285,90 +246,79 @@ class ConvPlan:
     """Executable algorithm choice for one ConvSpec."""
     spec: ConvSpec
     algorithm: str
-    source: str                       # heuristic | measured | forced | fallback
+    source: str          # heuristic | cost | measured | forced | fallback
     reason: str
     backend: str = "cpu"
     interpret: Optional[bool] = None  # forwarded to Pallas executors
 
+    @property
+    def executor(self):
+        """The registry entry this plan resolves to."""
+        from repro.core import executors
+        return executors.get(self.algorithm)
+
     def explain(self) -> str:
+        ex = self.executor
         return (f"{self.spec.key()} -> {self.algorithm} "
-                f"[{self.source}] {self.reason}")
+                f"[{self.source}] dtype={self.spec.dtype} "
+                f"accum={ex.accum} {self.reason}")
 
     # -- execution -------------------------------------------------------
     def __call__(self, x, w, bias=None):
         spec = self.spec
         if spec.has_bias and bias is None:
             raise ValueError(f"plan epilogue {spec.epilogue!r} needs a bias")
-        if self.algorithm == "cuconv_pallas":
-            # epilogue fused into the kernel: accumulator takes
-            # bias+activation in VMEM before its single HBM write
-            from repro.kernels import ops
-            return ops.cuconv_fused(
-                x, w, spec.padding, stride=spec.stride,
-                bias=bias if spec.has_bias else None,
-                activation="relu" if spec.wants_relu else None,
-                interpret=self.interpret)
-        from repro.core import cuconv
-        kwargs = {}
-        if self.algorithm in ("conv1x1_pallas", "cuconv_two_stage_pallas"):
-            kwargs["interpret"] = self.interpret   # honor debug requests
-        if spec.groups != 1:
-            # supports() routes every grouped spec to the library conv
-            kwargs["groups"] = spec.groups
-        y = cuconv.ALGORITHMS[self.algorithm](
-            x, w, stride=spec.stride, padding=spec.padding, **kwargs)
-        # two-stage epilogue for non-fused paths: one extra HBM round trip
-        if spec.has_bias:
-            y = y + bias
-        if spec.wants_relu:
-            y = jax.nn.relu(y)
-        return y
+        return self.executor.execute(
+            spec, x, w, bias=bias if spec.has_bias else None,
+            interpret=self.interpret)
 
 
 def plan(spec: ConvSpec, force: Optional[str] = None,
          backend: Optional[str] = None,
          interpret: Optional[bool] = None) -> ConvPlan:
-    """All conv algorithm choice, in one place.
+    """All conv algorithm choice, in one place — capability negotiation
+    over the executor registry.
 
-    Order: forced algorithm (capability-guarded, falling back like the
-    old ops.py VMEM check did) > persisted measured-autotune winner >
-    paper-region heuristic.
+    Order: forced executor (capability-guarded; an unsupported forced
+    choice takes the executor's declared fallback, except grouped specs,
+    which raise rather than silently running a different algorithm than
+    the caller demanded) > persisted measured-autotune winner > the
+    executors' heuristic region claims > cheapest supported executor.
     """
     PLAN_STATS["resolutions"] += 1
     backend = backend or jax.default_backend()
+    from repro.core import executors
 
     if force is not None:
-        from repro.core import cuconv
-        if force not in cuconv.ALGORITHMS:
-            raise KeyError(f"unknown algorithm {force!r}; "
-                           f"known: {sorted(cuconv.ALGORITHMS)}")
-        ok, why = supports(force, spec)
+        ex = executors.get(force)      # KeyError names the registry
+        ok, why = ex.supports(spec)
         if ok:
             return ConvPlan(spec, force, "forced", why, backend, interpret)
-        fb, fb_why = _fallback_for(force, spec)
+        if spec.groups != 1 and not ex.supports_groups:
+            # a grouped spec has no numerically-equivalent stand-in among
+            # ungrouped executors: falling back would silently ignore the
+            # caller's explicit choice, so refuse loudly instead
+            raise ValueError(
+                f"forced algorithm {force!r} cannot execute grouped spec "
+                f"{spec.key()} (groups={spec.groups}): {why}.  Force an "
+                f"executor that declares grouped support (e.g. 'lax') or "
+                f"let plan() negotiate.")
+        fb, fb_why = ex.fallback(spec)
+        fb_ok, fb_refusal = executors.get(fb).supports(spec)
+        if not fb_ok:
+            raise ValueError(
+                f"forced algorithm {force!r} cannot execute {spec.key()} "
+                f"({why}), and its declared fallback {fb!r} cannot either "
+                f"({fb_refusal})")
         return ConvPlan(spec, fb, "fallback",
                         f"{force} unsupported ({why}); {fb_why}",
                         backend, interpret)
 
     from repro.core import autotune
     measured = autotune.cached_best(spec, backend)
-    if measured is not None and supports(measured, spec)[0]:
+    if measured is not None and executors.capable(measured, spec):
         return ConvPlan(spec, measured, "measured",
                         "persisted autotune winner", backend, interpret)
 
-    algo, reason = heuristic_algorithm(spec, backend)
-    return ConvPlan(spec, algo, "heuristic", reason, backend, interpret)
-
-
-def _fallback_for(algorithm: str, spec: ConvSpec) -> Tuple[str, str]:
-    """Closest supported stand-in for an unsupported forced algorithm."""
-    if spec.groups != 1:
-        return "lax", "feature_group_count executes grouped convs"
-    if algorithm == "cuconv_pallas":
-        if spec.unit_stride:
-            # the old kernels/ops.py behaviour: oversized rows take the
-            # two-stage Pallas kernels (HBM temporaries, bounded VMEM)
-            return ("cuconv_two_stage_pallas",
-                    "two-stage kernels bound the VMEM working set")
-        return "cuconv", "fused-tap XLA path handles any stride"
-    return "lax", "library conv covers all geometries"
+    algo, source, reason = executors.negotiate(spec, backend)
+    return ConvPlan(spec, algo, source, reason, backend, interpret)

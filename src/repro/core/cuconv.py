@@ -10,10 +10,14 @@ stage 2 entirely (the paper's best-case region).
 TPU adaptation (DESIGN.md §2): NHWC instead of NCHW so the channel
 contraction is lane-contiguous; each per-tap GEMM maps onto the MXU.
 
-All algorithms below are numerically equivalent (property-tested) and
-policy-free executors: which one runs for a given configuration is
-decided exclusively by ``core.convspec.plan`` (DESIGN.md §4), which
-``conv2d(..., algorithm="auto")`` wraps.
+All algorithms below are numerically equivalent (property-tested),
+policy-free executor *functions*: each is wrapped by a registered
+``core.executors.Executor`` declaring its capabilities, and which one
+runs for a given configuration is decided exclusively by
+``core.convspec.plan`` negotiating over that registry (DESIGN.md §4/§8),
+which ``conv2d(..., algorithm="auto")`` wraps.  Every contraction
+accumulates fp32 (``preferred_element_type``) so bf16 inputs keep
+fp32 accumulation; outputs are cast back to the input dtype.
 
   lax              jax.lax.conv_general_dilated — the library baseline
                    (the cuDNN stand-in of the paper's comparison)
@@ -30,17 +34,17 @@ decided exclusively by ``core.convspec.plan`` (DESIGN.md §4), which
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple, Union
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-# geometry helpers have ONE home: core.convspec (aliased here for brevity)
+# geometry helpers and the Pad alias have ONE home: core.convspec
+# (aliased/re-exported here for brevity and back-compat)
+from repro.core.convspec import Pad  # noqa: F401  (public re-export)
 from repro.core.convspec import (normalize_pad as _norm_pad,
                                  normalize_stride as _norm_stride,
                                  out_size as _out_size)
-
-Pad = Union[int, Tuple[int, int], str]
 
 
 def _pad_input(x, ph, pw):
@@ -60,11 +64,13 @@ def conv_lax(x, w, stride=1, padding: Pad = "same", groups=1):
     """
     kh, kw = w.shape[0], w.shape[1]
     ph, pw = _norm_pad(padding, kh, kw)
-    return jax.lax.conv_general_dilated(
+    out = jax.lax.conv_general_dilated(
         x, w, window_strides=_norm_stride(stride),
         padding=((ph, ph), (pw, pw)),
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        feature_group_count=groups)
+        feature_group_count=groups,
+        preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
 
 
 def conv_im2col(x, w, stride=1, padding: Pad = "same"):
@@ -83,8 +89,9 @@ def conv_im2col(x, w, stride=1, padding: Pad = "same"):
         x.shape[2], kw, pw, sw)
     patches = jnp.stack(_tap_views(xp, kh, kw, oh, ow, (sh, sw)), axis=3)
     patches = patches.reshape(N * oh * ow, kh * kw * C)  # materialized!
-    out = patches @ w.reshape(kh * kw * C, M)
-    return out.reshape(N, oh, ow, M)
+    out = jnp.matmul(patches, w.reshape(kh * kw * C, M),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(N, oh, ow, M).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -206,16 +213,11 @@ def conv_winograd_or_fallback(x, w, stride=1, padding: Pad = "same"):
     return conv_lax(x, w, stride, padding)
 
 
-ALGORITHMS = {
-    "lax": conv_lax,
-    "im2col": conv_im2col,
-    "winograd": conv_winograd_or_fallback,
-    "cuconv_two_stage": conv_cuconv_two_stage,
-    "conv1x1_pallas": conv_conv1x1_pallas,
-    "cuconv_two_stage_pallas": conv_cuconv_two_stage_pallas,
-    "cuconv": conv_cuconv,
-    "cuconv_pallas": conv_cuconv_pallas,
-}
+# NOTE: there is deliberately no algorithm dict here any more.  The menu
+# of executors — names, capabilities, cost models — lives in
+# core/executors.py as registered Executor objects wrapping the pure
+# functions above; `repro.core.executors.ALGORITHMS` is the back-compat
+# {name: bare callable} view.
 
 
 def conv2d(x, w, stride=1, padding: Pad = "same", algorithm="auto",
@@ -226,9 +228,10 @@ def conv2d(x, w, stride=1, padding: Pad = "same", algorithm="auto",
     activation: None | 'relu' (anything else raises — no silent epilogue
     drop).  groups > 1 requests a grouped/depthwise conv, executed via
     the library's feature_group_count (plan() routes it there).
-    algorithm="auto" lets plan() choose (measured cache > paper-region
-    heuristic); naming an algorithm forces it, still subject to plan's
-    capability guards (e.g. the fused kernel's VMEM budget).  The
+    algorithm="auto" lets plan() negotiate over the executor registry
+    (measured cache > region claims > cheapest supported); naming a
+    registered executor forces it, still subject to its declared
+    capabilities (e.g. the fused kernel's VMEM budget).  The
     bias/activation epilogue is fused into the Pallas kernel when that
     path is planned, and applied as XLA ops otherwise.
     """

@@ -26,6 +26,12 @@ reason; this module is that seam for the repo (DESIGN.md §6):
               program with ZERO per-node plan() resolutions.  Entries
               carry a ``schema`` field; unversioned or mismatched
               entries are dropped, never misread.
+  PrecisionPolicy
+              graph-wide compute dtype (default + per-node overrides)
+              landing in each conv node's ``ConvSpec.dtype``, so a whole
+              network plans/autotunes/serves in bf16 end to end with
+              precision-distinct cache keys (fp32 accumulation is the
+              executors' declared behavior).
 
 ``ConvGraph`` (the PR-2 chained-ConvSpec API) survives as a thin
 compatibility constructor that lowers to the IR; ``plan_graph`` accepts
@@ -45,11 +51,66 @@ from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
 import jax
 import jax.numpy as jnp
 
-from repro.core.convspec import (ConvPlan, ConvSpec, normalize_pad,
-                                 normalize_stride, out_size, plan, supports)
+from repro.core.convspec import (ConvPlan, ConvSpec, canonical_dtype,
+                                 normalize_pad, normalize_stride, out_size,
+                                 plan)
 from repro.core.plancache import JsonCache
 
 LayerSpec = Tuple[int, int, int, int]          # (kh, kw, c_out, stride)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Graph-wide compute-dtype policy: one default plus per-node
+    overrides.
+
+    ``PrecisionPolicy("bf16")`` plans every conv node in bfloat16 (all
+    built-in executors accumulate fp32 for bf16 inputs — their declared
+    ``accum`` behavior); ``overrides={"stem": "fp32"}`` pins named conv
+    nodes to another dtype (e.g. a numerically sensitive stem; only
+    conv nodes carry a planned dtype, and ``GraphBuilder`` rejects
+    overrides naming anything else).  The
+    policy lands in each node's ``ConvSpec.dtype``, so every cache key —
+    measured autotune, graph signature, persisted graphplans entries —
+    is precision-distinct by construction: a bf16 plan can never serve
+    an fp32 graph, or vice versa.
+
+    Master params stay fp32; executors cast operands to the node dtype
+    at execution time.
+    """
+    default: str = "float32"
+    overrides: Tuple[Tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "default", canonical_dtype(self.default))
+        ovr = self.overrides
+        if isinstance(ovr, Mapping):
+            ovr = tuple(sorted(ovr.items()))
+        object.__setattr__(self, "overrides", tuple(
+            (str(name), canonical_dtype(dt)) for name, dt in ovr))
+
+    @classmethod
+    def of(cls, value) -> "PrecisionPolicy":
+        """Coerce any accepted spelling (policy | dtype string/dtype |
+        None) into a policy; None means fp32."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        return cls(canonical_dtype(value))
+
+    def dtype_for(self, node_name: str) -> str:
+        for name, dt in self.overrides:
+            if name == node_name:
+                return dt
+        return self.default
+
+    def key(self) -> str:
+        """Stable identity for plan-memo keys."""
+        if not self.overrides:
+            return self.default
+        ovr = ",".join(f"{n}={d}" for n, d in self.overrides)
+        return f"{self.default}[{ovr}]"
 
 # Persisted graph-plan entry schema.  v1 was the positional
 # {"algorithms": [...]} list of the chain era (implicitly unversioned);
@@ -345,14 +406,21 @@ class GraphBuilder:
     whole DAG at construction.
     """
 
-    def __init__(self, in_shape, dtype: str = "float32",
+    def __init__(self, in_shape, dtype: Union[str, PrecisionPolicy] = "float32",
                  input_name: str = "input"):
         self.in_shape = tuple(map(int, in_shape))
-        self.dtype = dtype
+        # ``dtype`` accepts a plain dtype string (every node) or a
+        # PrecisionPolicy (default + per-node overrides); model builders
+        # pass through whatever GraphModel.graph hands them
+        self.precision = PrecisionPolicy.of(dtype)
         self.input_name = input_name
         self.nodes: List[OpSpec] = []
         self.shapes: Dict[str, Tuple[int, ...]] = {
             input_name: self.in_shape}
+
+    @property
+    def dtype(self) -> str:
+        return self.precision.default
 
     def _put(self, node: OpSpec) -> str:
         self.shapes[node.name] = node.infer_shape(
@@ -368,7 +436,7 @@ class GraphBuilder:
         spec = ConvSpec(in_shape, (kh, kw, in_shape[3] // groups, c_out),
                         normalize_stride(stride),
                         normalize_pad(padding, kh, kw),
-                        self.dtype, epilogue, groups)
+                        self.precision.dtype_for(name), epilogue, groups)
         return self._put(ConvOp(name, (src,), spec))
 
     def pool(self, name: str, src: str, *, kind: str = "max", window=2,
@@ -396,6 +464,16 @@ class GraphBuilder:
         return self._put(DenseOp(name, (src,), (c_in, c_out), bias))
 
     def graph(self, output: Optional[str] = None) -> Graph:
+        # a precision override that names no CONV node is a typo (or a
+        # pool/add/dense node, which carries no planned dtype) and would
+        # silently no-op — exactly the numerics it was written to protect
+        convs = {n.name for n in self.nodes if isinstance(n, ConvOp)}
+        ghosts = [n for n, _ in self.precision.overrides if n not in convs]
+        if ghosts:
+            raise ValueError(
+                f"PrecisionPolicy overrides name non-conv node(s) "
+                f"{ghosts}; only conv nodes plan a dtype — conv nodes "
+                f"here: {sorted(convs)}")
         return Graph(tuple(self.nodes), self.in_shape,
                      self.input_name, output)
 
@@ -519,7 +597,9 @@ class GraphPlan:
         return fn
 
     def explain(self) -> str:
-        """One aligned table for the whole network (every IR node)."""
+        """One aligned table for the whole network (every IR node):
+        geometry, dtype, and executor provenance (which registry entry
+        won and why — forced / measured / heuristic / cost)."""
         lines = [f"GraphPlan[{self.source}] backend={self.backend} "
                  f"sig={self.graph.signature()} nodes={len(self.graph)}"]
         for node in self.graph.nodes:
@@ -531,8 +611,8 @@ class GraphPlan:
                 grp = f" g{s.groups}" if s.groups != 1 else ""
                 lines.append(
                     f"  {node.name:>8s}  {h:>3d}x{w:<3d} c{c:<4d} {kh}x{kw}/"
-                    f"{s.stride[0]}{grp} m{m:<4d} -> {p.algorithm:24s} "
-                    f"[{p.source}] {p.reason}")
+                    f"{s.stride[0]}{grp} m{m:<4d} {s.dtype:>9s} -> "
+                    f"{p.algorithm:24s} [{p.source}] {p.reason}")
             else:
                 out = self.graph.shapes[node.name]
                 lines.append(f"  {node.name:>8s}  {node.descriptor():50s} "
@@ -718,8 +798,7 @@ def _persist(graph: Graph, backend: str,
 
 def _plans_from_cache(graph: Graph,
                       backend: str) -> Optional[Dict[str, ConvPlan]]:
-    from repro.core import autotune
-    from repro.core.cuconv import ALGORITHMS
+    from repro.core import autotune, executors
     entry = _STORE.get(_graph_key(graph, backend))
     if not isinstance(entry, dict):
         return None
@@ -734,14 +813,14 @@ def _plans_from_cache(graph: Graph,
     for node in conv_nodes:
         algo = algos[node.name]
         spec = node.spec
-        if algo not in ALGORITHMS or not supports(algo, spec)[0]:
+        if not executors.capable(algo, spec):
             return None                 # stale entry: caller re-resolves
         # a measured winner recorded since this entry was persisted must
         # win (plan()'s measured > heuristic precedence survives the
         # graph layer): treat the entry as stale and re-resolve
         measured = autotune.cached_best(spec, backend)
         if (measured is not None and measured != algo
-                and supports(measured, spec)[0]):
+                and executors.capable(measured, spec)):
             return None
         plans[node.name] = ConvPlan(spec, algo, "graph_cache",
                                     "persisted graph-level plan", backend)

@@ -82,8 +82,10 @@ def pool2d(x, kind="max", window=(2, 2), stride=(2, 2), padding=(0, 0)):
     dims, strides = (1, kh, kw, 1), (1, sh, sw, 1)
     pads = ((0, 0), (ph, ph), (pw, pw), (0, 0))
     if kind == "max":
-        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                     dims, strides, pads)
+        # init value in the operand dtype so bf16 programs (precision
+        # policies) pool without an implicit f64 promotion error
+        return jax.lax.reduce_window(x, jnp.asarray(-jnp.inf, x.dtype),
+                                     jax.lax.max, dims, strides, pads)
     if kind == "avg":
         s = jax.lax.reduce_window(x, jnp.zeros((), x.dtype), jax.lax.add,
                                   dims, strides, pads)

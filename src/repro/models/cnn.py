@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core import cuconv
 from repro.core.graph import (ConvOp, DenseOp, Graph, GraphBuilder,
-                              GraphPlan, plan_graph)
+                              GraphPlan, PrecisionPolicy, plan_graph)
 
 
 def init_conv(key, kh, kw, c_in, c_out, dtype=jnp.float32):
@@ -60,36 +60,57 @@ def maxpool(x, k=2, s=2):
 class GraphModel:
     """A CNN whose whole forward pass is one planned Graph program.
 
-    ``builder(in_shape, dtype) -> Graph`` defines the architecture for
-    one input geometry; params are a name-keyed dict mirroring the IR
-    (``{node_name: {"w": ..., "b": ...}}`` for conv and dense nodes).
-    Param shapes are geometry-independent (GAP decouples the head from
-    the spatial extent), so ``init`` builds the graph once at the
-    model's canonical ``image_shape``.
+    ``builder(in_shape, precision) -> Graph`` defines the architecture
+    for one input geometry (``precision`` is a ``PrecisionPolicy`` —
+    ``GraphBuilder`` accepts it wherever a dtype string went); params
+    are a name-keyed dict mirroring the IR (``{node_name: {"w": ...,
+    "b": ...}}`` for conv and dense nodes).  Param shapes are
+    geometry-independent (GAP decouples the head from the spatial
+    extent), so ``init`` builds the graph once at the model's canonical
+    ``image_shape``.  Master params are always fp32; a bf16 policy casts
+    at the planned conv nodes (fp32 accumulation per the executors'
+    declarations).
     """
 
     def __init__(self, builder: Callable[[Tuple[int, ...], str], Graph],
-                 image_shape: Tuple[int, int, int], name: str = "graph_cnn"):
+                 image_shape: Tuple[int, int, int], name: str = "graph_cnn",
+                 precision=None):
         self.builder = builder
         self.image_shape = tuple(map(int, image_shape))     # (H, W, C)
         self.name = name
+        # model-level default policy; None defers to the input dtype
+        self.precision = (None if precision is None
+                          else PrecisionPolicy.of(precision))
         self._plan_cache: Dict[tuple, GraphPlan] = {}
 
+    def _policy(self, precision=None, dtype=None) -> PrecisionPolicy:
+        """Effective policy: per-call precision > model default > the
+        legacy per-call dtype string (derived from the input array)."""
+        if precision is not None:
+            return PrecisionPolicy.of(precision)
+        if self.precision is not None:
+            return self.precision
+        return PrecisionPolicy.of(dtype)
+
     # -- graph planning --------------------------------------------------
-    def graph(self, in_shape, dtype: str = "float32") -> Graph:
+    def graph(self, in_shape, dtype: str = "float32",
+              precision=None) -> Graph:
         """The whole-network IR for one input geometry."""
-        return self.builder(tuple(map(int, in_shape)), dtype)
+        pol = self._policy(precision, dtype)
+        return self.builder(tuple(map(int, in_shape)), pol)
 
     def graph_plan(self, in_shape, *, backend: Optional[str] = None,
-                   force: Optional[str] = None,
-                   dtype: str = "float32") -> GraphPlan:
+                   force: Optional[str] = None, dtype: str = "float32",
+                   precision=None) -> GraphPlan:
         """The whole-network plan for one input geometry, resolved once
-        per (geometry, backend, force) and memoized on the model."""
+        per (geometry, backend, force, precision) and memoized on the
+        model."""
         backend = backend or jax.default_backend()
-        key = (tuple(map(int, in_shape)), backend, force, dtype)
+        pol = self._policy(precision, dtype)
+        key = (tuple(map(int, in_shape)), backend, force, pol.key())
         gp = self._plan_cache.get(key)
         if gp is None:
-            gp = plan_graph(self.graph(in_shape, dtype=dtype),
+            gp = plan_graph(self.graph(in_shape, precision=pol),
                             backend=backend, force=force)
             self._plan_cache[key] = gp
         return gp
@@ -118,14 +139,18 @@ class GraphModel:
 
     # -- execution -------------------------------------------------------
     def apply(self, params, x, algorithm="auto",
-              graph_plan: Optional[GraphPlan] = None):
+              graph_plan: Optional[GraphPlan] = None, precision=None):
         """Run the planned program.  ``algorithm`` other than "auto"
-        forces that algorithm for every conv node (capability-guarded);
-        passing ``graph_plan`` skips the memo entirely (serving engines
-        hold their own per-bucket plans)."""
+        forces that registered executor for every conv node, subject to
+        each executor's declared capabilities — on a network with
+        grouped/depthwise nodes, forcing an executor that cannot run
+        them raises (force "lax" or use "auto"); ``precision`` overrides
+        the model's PrecisionPolicy for this call; passing ``graph_plan``
+        skips the memo entirely (serving engines hold their own
+        per-bucket plans)."""
         gp = graph_plan or self.graph_plan(
             x.shape, force=None if algorithm == "auto" else algorithm,
-            dtype=str(x.dtype))
+            dtype=str(x.dtype), precision=precision)
         return gp.run(x, params)
 
 
@@ -172,11 +197,11 @@ class SimpleCNN(GraphModel):
         return {"convs": params, "head": head}
 
     def apply(self, params, x, algorithm="auto",
-              graph_plan: Optional[GraphPlan] = None):
+              graph_plan: Optional[GraphPlan] = None, precision=None):
         """Run the planned program (see GraphModel.apply)."""
         named = {f"conv{i}": p for i, p in enumerate(params["convs"])}
         named["head"] = {"w": params["head"]}
-        return super().apply(named, x, algorithm, graph_plan)
+        return super().apply(named, x, algorithm, graph_plan, precision)
 
 
 # ---------------------------------------------------------------------------
@@ -192,7 +217,8 @@ def squeezenet_like():
     ])
 
 
-def resnet_like(num_classes: int = 10, image_shape=(32, 32, 3)):
+def resnet_like(num_classes: int = 10, image_shape=(32, 32, 3),
+                precision=None):
     """Small ResNet-flavoured network: stem, maxpool, an identity
     residual block, a downsampling residual block with 1x1 projection,
     GAP + dense head — all inside ONE planned program.
@@ -216,10 +242,12 @@ def resnet_like(num_classes: int = 10, image_shape=(32, 32, 3)):
         y = b.gap("gap", y)
         b.dense("head", y, num_classes)
         return b.graph()
-    return GraphModel(build, image_shape, name="resnet_like")
+    return GraphModel(build, image_shape, name="resnet_like",
+                      precision=precision)
 
 
-def mobilenet_like(num_classes: int = 10, image_shape=(32, 32, 3)):
+def mobilenet_like(num_classes: int = 10, image_shape=(32, 32, 3),
+                   precision=None):
     """Small MobileNet-flavoured network: strided stem, two depthwise-
     separable stages (3x3 depthwise conv with groups=C, then 1x1
     pointwise), GAP + dense head — all inside ONE planned program."""
@@ -233,10 +261,12 @@ def mobilenet_like(num_classes: int = 10, image_shape=(32, 32, 3)):
         y = b.gap("gap", y)
         b.dense("head", y, num_classes)
         return b.graph()
-    return GraphModel(build, image_shape, name="mobilenet_like")
+    return GraphModel(build, image_shape, name="mobilenet_like",
+                      precision=precision)
 
 
-def fire_like(num_classes: int = 10, image_shape=(32, 32, 3)):
+def fire_like(num_classes: int = 10, image_shape=(32, 32, 3),
+              precision=None):
     """SqueezeNet fire module done properly: squeeze 1x1 feeding 1x1 and
     3x3 expand branches whose outputs CONCAT on the channel axis —
     planned as one program (the chain API could not express this)."""
@@ -251,4 +281,5 @@ def fire_like(num_classes: int = 10, image_shape=(32, 32, 3)):
         y = b.gap("gap", y)
         b.dense("head", y, num_classes)
         return b.graph()
-    return GraphModel(build, image_shape, name="fire_like")
+    return GraphModel(build, image_shape, name="fire_like",
+                      precision=precision)

@@ -14,7 +14,9 @@ that fits the remaining queue — short remainders ride the smallest
 bucket with zero-padded slots.  Plans are resolved once per bucket (and
 persisted via the graph-level cache), so a warm engine serves any
 request mix with zero plan() resolutions and at most ``len(buckets)``
-compiled shapes.
+compiled shapes.  A graph-wide ``PrecisionPolicy`` (``precision="bf16"``)
+plans every bucket program in reduced precision end to end — fp32
+master params, fp32 accumulation, precision-distinct cache keys.
 """
 from __future__ import annotations
 
@@ -48,7 +50,7 @@ class CnnServeEngine:
 
     def __init__(self, model, params, image_shape: Tuple[int, int, int], *,
                  buckets: Tuple[int, ...] = (1, 4, 8), algorithm="auto",
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, precision=None):
         self.model, self.params = model, params
         self.image_shape = tuple(map(int, image_shape))     # (H, W, C)
         self.buckets = tuple(sorted({int(b) for b in buckets}))
@@ -56,6 +58,11 @@ class CnnServeEngine:
             raise ValueError(f"buckets must be positive ints; got {buckets}")
         self.algorithm = algorithm
         self.backend = backend or jax.default_backend()
+        # graph-wide PrecisionPolicy (e.g. "bf16") for every bucket
+        # program; None defers to the model's own policy / fp32 inputs.
+        # Master params stay fp32 — conv nodes cast per their specs, so
+        # the same engine params serve any policy.
+        self.precision = precision
         self.queue: List[ImageRequest] = []
         self._fns: Dict[int, Callable] = {}    # bucket -> jitted program
         self.stats = {"images": 0, "padded_slots": 0,
@@ -72,7 +79,8 @@ class CnnServeEngine:
         if fn is None:
             gp = self.model.graph_plan(
                 (b,) + self.image_shape, backend=self.backend,
-                force=None if self.algorithm == "auto" else self.algorithm)
+                force=None if self.algorithm == "auto" else self.algorithm,
+                precision=self.precision)
             fn = jax.jit(lambda params, xb: self.model.apply(
                 params, xb, graph_plan=gp))
             self._fns[b] = fn
@@ -89,7 +97,8 @@ class CnnServeEngine:
         out = {}
         for b in self.buckets:
             if measure and self.algorithm == "auto":
-                self.model.graph_plan((b, H, W, C), backend=self.backend) \
+                self.model.graph_plan((b, H, W, C), backend=self.backend,
+                                      precision=self.precision) \
                     .warmup(measure=True)
                 # the measured sweep may have swapped node plans: an
                 # already-compiled program would keep serving the stale

@@ -6,6 +6,7 @@ import pytest
 
 from repro.core import cuconv as cc
 from repro.core import convspec as cs
+from repro.core import executors as ex
 
 TOLS = {"float32": dict(rtol=3e-4, atol=3e-4),
         "bfloat16": dict(rtol=3e-2, atol=3e-2)}
@@ -73,7 +74,7 @@ def test_every_algorithm_matches_lax_for_every_epilogue(rng, K, epilogue):
     want = _lax_ref(x, w, 1, "same", bias=bias, relu=act == "relu")
     spec = cs.ConvSpec.for_conv(x, w, 1, "same", bias=bias, activation=act)
     assert spec.epilogue == epilogue
-    for name in cc.ALGORITHMS:
+    for name in ex.names():
         if not cs.supports(name, spec)[0]:
             continue
         got = cc.conv2d(x, w, 1, "same", algorithm=name, bias=bias,
@@ -108,16 +109,18 @@ def test_auto_routes_through_plan():
     spec = cs.ConvSpec((1, 7, 7, 32), (1, 1, 32, 16))
     p = cs.plan(spec)
     assert p.source in ("heuristic", "measured")
-    assert p.algorithm in cc.ALGORITHMS
+    assert p.algorithm in ex.names()
     assert p.algorithm in p.explain() and spec.key() in p.explain()
+    assert "dtype=float32" in p.explain()             # precision provenance
 
 
 def test_plan_respects_vmem_budget_fallback():
     """Oversized fused working sets take the two-stage path (the guard
-    that used to live in kernels/ops.py)."""
+    that used to live in kernels/ops.py — now the fused executor's own
+    capability declaration)."""
     spec = cs.ConvSpec((1, 8, 2100, 1024), (3, 3, 1024, 8),
                        stride=(1, 1), padding=(1, 1))
-    assert cs.fused_vmem_bytes(spec) > cs.FUSED_VMEM_BUDGET
+    assert ex.get("cuconv_pallas").vmem_bytes(spec) > ex.FUSED_VMEM_BUDGET
     p = cs.plan(spec, force="cuconv_pallas")
     assert p.algorithm == "cuconv_two_stage_pallas"
     assert p.source == "fallback"
@@ -134,14 +137,14 @@ def test_plan_fallback_is_numerically_correct(rng):
     x = _mk(rng, (1, 6, 300, 64), jnp.float32)
     w = _mk(rng, (3, 3, 64, 4), jnp.float32)
     spec = cs.ConvSpec.for_conv(x, w, 1, "same")
-    old = cs.FUSED_VMEM_BUDGET
+    old = ex.FUSED_VMEM_BUDGET
     try:
-        cs.FUSED_VMEM_BUDGET = 1024            # force the guard to trip
+        ex.FUSED_VMEM_BUDGET = 1024            # force the guard to trip
         p = cs.plan(spec, force="cuconv_pallas")
         assert p.source == "fallback"
         got = p(x, w)
     finally:
-        cs.FUSED_VMEM_BUDGET = old
+        ex.FUSED_VMEM_BUDGET = old
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(_lax_ref(x, w, 1, "same")),
                                rtol=3e-4, atol=3e-4)
@@ -274,10 +277,10 @@ def test_measured_cache_ignored_for_other_spec(rng, tmp_path, monkeypatch):
 
 def test_measure_default_candidates_include_pallas(rng, tmp_path, monkeypatch):
     """Measured mode must be able to pick the kernels this repo exists
-    to showcase: the default candidate set is ALGORITHMS filtered by
-    supports(), and bias/activation ride into the timed executions."""
+    to showcase: the default candidate set is every registered executor
+    filtered by its declared capabilities, and bias/activation ride into
+    the timed executions."""
     from repro.core import autotune
-    from repro.core.cuconv import ALGORITHMS
     monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
     autotune.clear_cache()
     spec = cs.ConvSpec((1, 4, 4, 4), (1, 1, 4, 3))
@@ -294,4 +297,4 @@ def test_measure_default_candidates_include_pallas(rng, tmp_path, monkeypatch):
     b = _mk(rng, (3,), jnp.float32)
     best = autotune.measure_algorithm(x, w, repeats=1, bias=b,
                                       activation="relu")
-    assert best in ALGORITHMS
+    assert best in ex.names()

@@ -8,6 +8,7 @@ except ImportError:   # deterministic fallback; see _hypothesis_compat
     from _hypothesis_compat import assume, given, settings, strategies as st
 
 from repro.core import cuconv as cc
+from repro.core.executors import ALGORITHMS
 from repro.kernels import ref
 
 conv_shapes = st.tuples(
@@ -37,7 +38,7 @@ def test_all_algorithms_agree(shape_tuple, seed):
         s = 1
     want = cc.conv_lax(x, w, s, "same")
     for name in ["im2col", "cuconv_two_stage", "cuconv"]:
-        got = cc.ALGORITHMS[name](x, w, s, "same")
+        got = ALGORITHMS[name](x, w, s, "same")
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=3e-4, atol=3e-4, err_msg=name)
 
@@ -107,7 +108,7 @@ def test_measured_autotune_runs(rng):
     x = jnp.asarray(rng.normal(size=(1, 7, 7, 32)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(1, 1, 32, 16)), jnp.float32)
     best = measure_algorithm(x, w, repeats=1)
-    assert best in cc.ALGORITHMS
+    assert best in ALGORITHMS
 
 
 @settings(max_examples=25, deadline=None)
@@ -139,7 +140,6 @@ def test_winograd_filter_transform_identity():
 
 
 def test_winograd_fallback_non3x3():
-    from repro.core.cuconv import ALGORITHMS
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(1, 7, 7, 4)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(5, 5, 4, 3)), jnp.float32)

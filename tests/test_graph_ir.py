@@ -390,3 +390,100 @@ def test_reset_plan_stats_helper():
     discarded = cs.reset_plan_stats()
     assert discarded > 0
     assert cs.PLAN_STATS["resolutions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# graph-wide precision policy (bf16 end to end)
+
+def test_precision_policy_spellings_and_overrides():
+    pol = g.PrecisionPolicy("bf16", overrides={"stem": "fp32"})
+    assert pol.default == "bfloat16"
+    assert pol.dtype_for("stem") == "float32"
+    assert pol.dtype_for("anything_else") == "bfloat16"
+    assert g.PrecisionPolicy.of("bf16") == g.PrecisionPolicy("bfloat16")
+    assert g.PrecisionPolicy.of(None).default == "float32"
+    assert pol.key() != g.PrecisionPolicy("bf16").key()
+    with pytest.raises(ValueError, match="dtype"):
+        g.PrecisionPolicy("not_a_dtype")
+
+
+def test_precision_policy_lands_in_node_specs_and_signature():
+    """The policy becomes each conv node's ConvSpec.dtype, with
+    per-node overrides honored — and the graph signature (the persisted
+    cache key) is precision-distinct."""
+    def build(precision):
+        b = GraphBuilder((1, 8, 8, 3), precision)
+        y = b.conv("stem", "input", 3, 4)
+        b.conv("c1", y, 3, 4, epilogue="bias")
+        return b.graph()
+    g32 = build("float32")
+    gbf = build(g.PrecisionPolicy("bf16", overrides={"stem": "fp32"}))
+    assert [n.spec.dtype for n in g32.conv_nodes] == ["float32", "float32"]
+    assert [n.spec.dtype for n in gbf.conv_nodes] == ["float32", "bfloat16"]
+    assert g32.signature() != gbf.signature()
+    assert "-bfloat16-" in gbf.conv_nodes[1].spec.key()
+    # a typo'd override would silently run the node in the default
+    # dtype — the builder rejects overrides naming no node
+    with pytest.raises(ValueError, match="stem0"):
+        build(g.PrecisionPolicy("bf16", overrides={"stem0": "fp32"}))
+
+
+def test_acceptance_resnet_bf16_plans_warms_serves(rng):
+    """Acceptance: a full resnet_like network plans, warms up and serves
+    through CnnServeEngine under PrecisionPolicy("bf16") with fp32
+    accumulation — numerics within bf16 tolerance of the fp32 path,
+    cache keys dtype-distinct (no fp32/bf16 collisions)."""
+    from repro.core import executors as ex
+    model = resnet_like(num_classes=4)
+    params = model.init(jax.random.PRNGKey(0))
+
+    gp32 = model.graph_plan((1, 32, 32, 3))
+    gpbf = model.graph_plan((1, 32, 32, 3), precision="bf16")
+    assert all(n.spec.dtype == "bfloat16" for n in gpbf.graph.conv_nodes)
+    # every chosen executor declares bf16 + fp32 accumulation
+    for p in gpbf.conv_plans.values():
+        assert "bfloat16" in ex.get(p.algorithm).dtypes
+        assert ex.get(p.algorithm).accum == "float32"
+    # dtype-distinct persisted keys: both entries coexist in the store
+    assert gp32.graph.signature() != gpbf.graph.signature()
+    assert g._STORE.get(g._graph_key(gp32.graph, gp32.backend)) is not None
+    assert g._STORE.get(g._graph_key(gpbf.graph, gpbf.backend)) is not None
+    assert "bfloat16" in gpbf.explain() and "bfloat16" not in gp32.explain()
+    gpbf.warmup()
+
+    eng = CnnServeEngine(model, params, (32, 32, 3), buckets=(1, 2),
+                         precision="bf16")
+    eng.warmup()
+    reqs = [ImageRequest(rid=i, images=rng.normal(
+        size=(n, 32, 32, 3)).astype(np.float32))
+        for i, n in enumerate([1, 3, 2])]
+    for r in reqs:
+        eng.submit(r)
+    cs.reset_plan_stats()
+    done = eng.run()
+    assert cs.PLAN_STATS["resolutions"] == 0      # warm engine: no re-plans
+    for r in done:
+        for i in range(r.images.shape[0]):
+            want = _resnet_ref(params, jnp.asarray(r.images[i:i + 1]))
+            np.testing.assert_allclose(
+                r.out[i].astype(np.float32), np.asarray(want)[0],
+                rtol=4e-2, atol=4e-2, err_msg=f"req {r.rid} image {i}")
+
+
+def test_bf16_measured_warmup_uses_dtype_distinct_autotune_keys():
+    """warmup(measure=True) on a bf16 graph records winners under bf16
+    spec keys — an fp32 sweep can never serve (or clobber) them."""
+    from repro.core import autotune
+    b = GraphBuilder((1, 6, 6, 3), "bf16")
+    b.conv("c0", "input", 1, 4)
+    gp = g.plan_graph(b.graph())
+    gp.warmup(measure=True, repeats=1)
+    spec_bf = gp.graph.conv_nodes[0].spec
+    assert autotune.cached_best(spec_bf) is not None
+    spec_f32 = dataclasses_replace_dtype(spec_bf, "float32")
+    assert autotune.cached_best(spec_f32) is None
+
+
+def dataclasses_replace_dtype(spec, dtype):
+    import dataclasses
+    return dataclasses.replace(spec, dtype=dtype)

@@ -11,6 +11,7 @@ except ImportError:   # deterministic fallback; see _hypothesis_compat
 
 from repro.core import convspec as cs
 from repro.core import cuconv as cc
+from repro.core import executors as ex
 
 
 @pytest.fixture(autouse=True)
@@ -105,12 +106,28 @@ def test_grouped_plan_routes_to_library_conv():
     p = cs.plan(spec)
     assert (p.algorithm, p.source) == ("lax", "heuristic")
     assert "feature_group_count" in p.reason
-    for name in cc.ALGORITHMS:
+    for name in ex.names():
         ok, why = cs.supports(name, spec)
         assert ok == (name == "lax"), name
-    # forcing a dedicated kernel falls back instead of mis-executing
-    fp = cs.plan(spec, force="cuconv_pallas")
-    assert (fp.algorithm, fp.source) == ("lax", "fallback")
+
+
+def test_forcing_ungrouped_executor_on_grouped_spec_raises():
+    """Forcing an executor that cannot run grouped specs is a loud,
+    named error at plan time — not a silent fallback to a different
+    algorithm than the caller demanded, and not a failure deep inside
+    the kernel."""
+    spec = _dw_spec()
+    with pytest.raises(ValueError) as err:
+        cs.plan(spec, force="cuconv_pallas")
+    msg = str(err.value)
+    assert "cuconv_pallas" in msg             # names the executor
+    assert spec.key() in msg                  # names the spec
+    assert "groups" in msg
+    with pytest.raises(ValueError, match="winograd"):
+        cs.plan(spec, force="winograd")
+    # the one grouped-capable executor still forces cleanly
+    fp = cs.plan(spec, force="lax")
+    assert (fp.algorithm, fp.source) == ("lax", "forced")
 
 
 def test_grouped_measure_and_heuristic_on_tpu_backend(rng):
