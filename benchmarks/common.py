@@ -1,12 +1,16 @@
-"""Shared timing harness for the benchmark suite."""
+"""Shared timing + result-recording harness for the benchmark suite."""
 from __future__ import annotations
 
-import functools
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
+
+#: persisted benchmark-artifact schema (BENCH_*.json)
+BENCH_SCHEMA = 1
 
 
 def time_fn(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
@@ -25,3 +29,23 @@ def time_fn(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
 
 def csv_row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def write_json(stem: str, records: List[Dict],
+               out_dir: Optional[str] = None) -> str:
+    """Persist machine-readable benchmark results as ``BENCH_<stem>.json``.
+
+    ``records`` is a list of dicts (name, config, dtype, algorithm,
+    tuned config, µs, ...); the envelope carries a schema version and
+    the backend so the perf trajectory can be tracked (and CI-archived)
+    across PRs.  Returns the written path.  ``$REPRO_BENCH_DIR``
+    overrides the output directory (default: CWD).
+    """
+    out_dir = out_dir or os.environ.get("REPRO_BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{stem}.json")
+    with open(path, "w") as f:
+        json.dump({"schema": BENCH_SCHEMA,
+                   "backend": jax.default_backend(),
+                   "records": records}, f, indent=1, sort_keys=True)
+    return path

@@ -15,6 +15,11 @@ models run under both the fp32 default and ``PrecisionPolicy("bf16")``
 (fp32 master params, fp32 accumulation, precision-distinct plan-cache
 keys), so the reduced-precision deployment story is benchmarked on the
 same programs.
+
+Besides the CSV rows, every run writes ``BENCH_graph_serve.json``
+(benchmarks/common.write_json): machine-readable records — name, model
+config, dtype, per-node algorithms with their resolved launch configs,
+µs — so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -22,17 +27,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, time_fn
+from benchmarks.common import csv_row, time_fn, write_json
 from repro.models.cnn import mobilenet_like, resnet_like, squeezenet_like
 from repro.serve.cnn import CnnServeEngine, ImageRequest
 
 HW, C = 32, 3
 
 
+def _plan_record(gp):
+    """Per-node (algorithm, launch config) provenance of a GraphPlan."""
+    return {n: {"algorithm": p.algorithm,
+                "config": p.config.as_dict() if p.config else {},
+                "config_source": p.config_source}
+            for n, p in gp.conv_plans.items()}
+
+
 def run(quick=True):
     rng = np.random.default_rng(0)
     rows = ["# graph_serve: one planned program per batch bucket "
             "(squeezenet-like stack, 32x32x3)"]
+    records = []
     model = squeezenet_like()
     params = model.init(jax.random.PRNGKey(0))
     buckets = (1, 4) if quick else (1, 4, 16)
@@ -49,6 +63,10 @@ def run(quick=True):
         us = time_fn(fn, params, x, repeats=3, warmup=1)
         rows.append(csv_row(f"graph/steady_b{b}", us,
                             f"dtype=float32 per_image_us={us / b:.1f}"))
+        records.append({"name": f"graph/steady_b{b}",
+                        "config": f"squeezenet_like b{b} {HW}x{HW}x{C}",
+                        "dtype": "float32", "us": us,
+                        "plans": _plan_record(gp)})
 
     eng = CnnServeEngine(model, params, (HW, HW, C), buckets=buckets)
     eng.warmup()
@@ -69,6 +87,11 @@ def run(quick=True):
         f"buckets_used={len(used)}/{len(eng.buckets)} "
         f"padded={eng.stats['padded_slots']} "
         f"per_image_us={total_us / max(eng.stats['images'], 1):.1f}"))
+    records.append({"name": "graph/serve_stream",
+                    "config": f"squeezenet_like buckets={list(buckets)}",
+                    "dtype": "float32", "us": total_us,
+                    "images": eng.stats["images"],
+                    "padded_slots": eng.stats["padded_slots"]})
 
     # IR models: residual / pool / depthwise forward passes as ONE
     # program, under both the fp32 default and the bf16 precision policy
@@ -94,4 +117,10 @@ def run(quick=True):
                 f"graph/{m.name}_steady_b1_{dtype}", us,
                 f"dtype={dtype} whole-network program "
                 f"(pool/add/head inside)"))
+            records.append({"name": f"graph/{m.name}_steady_b1_{dtype}",
+                            "config": f"{m.name} b1 {HW}x{HW}x{C}",
+                            "dtype": dtype, "us": us,
+                            "plans": _plan_record(gp)})
+    path = write_json("graph_serve", records)
+    rows.append(f"# wrote {path}")
     return rows

@@ -5,6 +5,12 @@ sum_kernel) against the library and explicit-GEMM baselines, plus the
 beyond-paper fused variant — reproducing the tables' structure: for 1x1
 configs stage 2 is absent; for KxK the paper found stage 1 dominates
 (91-99 %) and stage 2 is the small remainder.
+
+Besides the CSV rows, every run writes ``BENCH_table345.json``
+(benchmarks/common.write_json): one machine-readable record per
+(config, variant) with the planner's negotiated algorithm and its
+resolved launch config for the configuration, so the per-config perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -14,17 +20,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, time_fn
+from benchmarks.common import csv_row, time_fn, write_json
 from repro.configs.cnn_paper import PROFILED
+from repro.core import convspec as cs
 from repro.core import cuconv as cc
 
 
 def run(quick=True):
     rng = np.random.default_rng(0)
     rows = ["# table345_breakdown: name,us_per_call,derived"]
+    records = []
     for label, (hw, batch, k, M, C) in PROFILED.items():
         x = jnp.asarray(rng.normal(size=(batch, hw, hw, C)), jnp.float32)
         w = jnp.asarray(rng.normal(size=(k, k, C, M)), jnp.float32)
+        # what the planner would run for this configuration, launch
+        # config included (measured if a tuning sweep ran on this
+        # machine, the executor's model default otherwise)
+        plan = cs.plan(cs.ConvSpec.for_conv(x, w, 1, "same"))
+        planned = {"algorithm": plan.algorithm, "source": plan.source,
+                   "config": plan.config.as_dict() if plan.config else {},
+                   "config_source": plan.config_source}
         s1 = jax.jit(functools.partial(cc.cuconv_stage1, stride=1,
                                        padding="same"))
         t1 = time_fn(s1, x, w, repeats=3, warmup=1)
@@ -53,4 +68,15 @@ def run(quick=True):
                             f"fusion_gain={(t1+t2)/max(t_fused,1e-9):.2f}x"))
         rows.append(csv_row(f"t345/{label}/library", t_lax, ""))
         rows.append(csv_row(f"t345/{label}/im2col_gemm", t_im2col, ""))
+        config = f"{hw}x{hw}x{C} b{batch} k{k} m{M}"
+        for variant, us in (("stage1", t1), ("stage2", t2),
+                            ("fused", t_fused), ("library", t_lax),
+                            ("im2col_gemm", t_im2col)):
+            if variant == "stage2" and k == 1:
+                continue
+            records.append({"name": f"t345/{label}/{variant}",
+                            "config": config, "dtype": "float32",
+                            "us": us, "planned": planned})
+    path = write_json("table345", records)
+    rows.append(f"# wrote {path}")
     return rows

@@ -1,9 +1,12 @@
-"""Quickstart: the cuConv public API in 30 lines.
+"""Quickstart: the cuConv public API in 40 lines.
 
 Runs one convolution through every registered executor (library
 baseline, explicit GEMM, the paper's two-stage cuConv, the fused
 beyond-paper variant, and the Pallas TPU kernel in interpret mode) and
-checks they agree; then uses the cuDNN-style per-layer autotuner.
+checks they agree; then uses the cuDNN-style per-layer autotuner — both
+the algorithm sweep and the per-configuration *launch-config* sweep
+(tile geometry per convolution configuration, the paper's own
+config-selection lever).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,6 +16,7 @@ import numpy as np
 from repro.core import conv2d
 from repro.core import executors
 from repro.core.autotune import select_algorithm, measure_algorithm
+from repro.core.convspec import ConvSpec, plan
 
 rng = np.random.default_rng(0)
 # the paper's headline configuration: 7x7x832 input, 256 1x1 filters,
@@ -30,3 +34,12 @@ for name in executors.names():      # the registered executor menu
 heur = select_algorithm(x.shape, w.shape)
 best = measure_algorithm(x, w)
 print(f"autotune heuristic: {heur}   measured best on this machine: {best}")
+
+# launch-config tuning: sweep the 1x1 Pallas kernel's VMEM-feasible tile
+# geometries for THIS configuration and persist the (algorithm, config)
+# winner — a later plan() replays it from cache with zero re-measurement
+tuned = plan(ConvSpec.for_conv(x, w), force="conv1x1_pallas", tune="full")
+print(f"tuned launch config: {tuned.algorithm} "
+      f"cfg[{tuned.config_source}]={tuned.config.key()}")
+replay = plan(ConvSpec.for_conv(x, w), force="conv1x1_pallas")
+assert replay.config == tuned.config and replay.config_source == "measured"

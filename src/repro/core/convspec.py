@@ -243,13 +243,17 @@ def reset_plan_stats() -> int:
 
 @dataclasses.dataclass(frozen=True)
 class ConvPlan:
-    """Executable algorithm choice for one ConvSpec."""
+    """Executable ``(algorithm, launch config)`` choice for one ConvSpec."""
     spec: ConvSpec
     algorithm: str
     source: str          # heuristic | cost | measured | forced | fallback
     reason: str
     backend: str = "cpu"
     interpret: Optional[bool] = None  # forwarded to Pallas executors
+    #: resolved launch config (executors.LaunchConfig; empty/None for
+    #: untunable executors) and its provenance
+    config: Optional[object] = None
+    config_source: str = "default"    # default | measured | forced
 
     @property
     def executor(self):
@@ -259,8 +263,10 @@ class ConvPlan:
 
     def explain(self) -> str:
         ex = self.executor
+        cfg = (f" cfg[{self.config_source}]={self.config.key()}"
+               if self.config else "")
         return (f"{self.spec.key()} -> {self.algorithm} "
-                f"[{self.source}] dtype={self.spec.dtype} "
+                f"[{self.source}]{cfg} dtype={self.spec.dtype} "
                 f"accum={ex.accum} {self.reason}")
 
     # -- execution -------------------------------------------------------
@@ -270,30 +276,92 @@ class ConvPlan:
             raise ValueError(f"plan epilogue {spec.epilogue!r} needs a bias")
         return self.executor.execute(
             spec, x, w, bias=bias if spec.has_bias else None,
-            interpret=self.interpret)
+            interpret=self.interpret, config=self.config)
+
+
+def resolve_config(spec: ConvSpec, algorithm: str,
+                   backend: str) -> Tuple[object, str]:
+    """``(launch config, provenance)`` for an already-chosen algorithm.
+
+    The persisted measured winner serves if it is still valid for this
+    spec under the executor's current declarations (a stale config —
+    e.g. ``rows`` larger than OH after a geometry change, or a
+    tightened VMEM budget — is dropped, never served); otherwise the
+    executor's model-chosen ``default_config``.
+    """
+    from repro.core import autotune, executors
+    ex = executors.get(algorithm)
+    cached = autotune.cached_config(spec, backend, algorithm)
+    if cached is not None and ex.config_supports(spec, cached)[0]:
+        return cached, "measured"
+    return ex.default_config(spec), "default"
+
+
+def _with_config(spec, algorithm, source, reason, backend, interpret,
+                 config) -> ConvPlan:
+    """Attach the resolved (or caller-forced) launch config to a plan."""
+    from repro.core import executors
+    if config is not None:
+        cfg = executors.LaunchConfig.of(config)
+        ok, why = executors.get(algorithm).config_supports(spec, cfg)
+        if not ok:
+            raise ValueError(
+                f"forced launch config {cfg.as_dict()} is not supported "
+                f"by executor {algorithm!r} for spec {spec.key()}: {why}")
+        return ConvPlan(spec, algorithm, source, reason, backend, interpret,
+                        cfg, "forced")
+    cfg, cfg_src = resolve_config(spec, algorithm, backend)
+    return ConvPlan(spec, algorithm, source, reason, backend, interpret,
+                    cfg, cfg_src)
 
 
 def plan(spec: ConvSpec, force: Optional[str] = None,
          backend: Optional[str] = None,
-         interpret: Optional[bool] = None) -> ConvPlan:
+         interpret: Optional[bool] = None,
+         tune: Optional[str] = None,
+         config=None) -> ConvPlan:
     """All conv algorithm choice, in one place — capability negotiation
-    over the executor registry.
+    over the executor registry — resolving an ``(algorithm, launch
+    config)`` pair.
 
-    Order: forced executor (capability-guarded; an unsupported forced
-    choice takes the executor's declared fallback, except grouped specs,
-    which raise rather than silently running a different algorithm than
-    the caller demanded) > persisted measured-autotune winner > the
-    executors' heuristic region claims > cheapest supported executor.
+    Algorithm order: forced executor (capability-guarded; an unsupported
+    forced choice takes the executor's declared fallback, except grouped
+    specs, which raise rather than silently running a different
+    algorithm than the caller demanded) > persisted measured-autotune
+    winner > the executors' heuristic region claims > cheapest supported
+    executor.
+
+    ``tune`` runs the measured sweep first (``"algo"``: time every
+    capable executor — with ``force`` the sweep still runs and records
+    the unforced winner, the pin only decides what THIS plan serves;
+    ``"full"``: sweep the candidate launch configs of the forced
+    executor, or of the winner after an algorithm sweep) and persists
+    the winners, so the very plan returned already serves them — and
+    every later ``plan()`` replays them from cache with zero
+    re-measurement.  ``config`` forces a launch config
+    (validated against the executor's ``config_supports`` — an
+    infeasible forced config raises naming executor, config and spec);
+    otherwise the persisted measured config (if still valid) or the
+    executor's model-chosen ``default_config`` rides the plan.
     """
     PLAN_STATS["resolutions"] += 1
     backend = backend or jax.default_backend()
     from repro.core import executors
 
+    if tune not in (None, "algo", "full"):
+        raise ValueError(f'tune must be None, "algo" or "full"; '
+                         f'got {tune!r}')
+    if tune is not None:
+        from repro.core import autotune
+        autotune.tune_spec(spec, tune=tune, backend=backend,
+                           algorithm=force)
+
     if force is not None:
         ex = executors.get(force)      # KeyError names the registry
         ok, why = ex.supports(spec)
         if ok:
-            return ConvPlan(spec, force, "forced", why, backend, interpret)
+            return _with_config(spec, force, "forced", why, backend,
+                                interpret, config)
         if spec.groups != 1 and not ex.supports_groups:
             # a grouped spec has no numerically-equivalent stand-in among
             # ungrouped executors: falling back would silently ignore the
@@ -310,15 +378,17 @@ def plan(spec: ConvSpec, force: Optional[str] = None,
                 f"forced algorithm {force!r} cannot execute {spec.key()} "
                 f"({why}), and its declared fallback {fb!r} cannot either "
                 f"({fb_refusal})")
-        return ConvPlan(spec, fb, "fallback",
-                        f"{force} unsupported ({why}); {fb_why}",
-                        backend, interpret)
+        return _with_config(spec, fb, "fallback",
+                            f"{force} unsupported ({why}); {fb_why}",
+                            backend, interpret, config)
 
     from repro.core import autotune
     measured = autotune.cached_best(spec, backend)
     if measured is not None and executors.capable(measured, spec):
-        return ConvPlan(spec, measured, "measured",
-                        "persisted autotune winner", backend, interpret)
+        return _with_config(spec, measured, "measured",
+                            "persisted autotune winner", backend,
+                            interpret, config)
 
     algo, source, reason = executors.negotiate(spec, backend)
-    return ConvPlan(spec, algo, source, reason, backend, interpret)
+    return _with_config(spec, algo, source, reason, backend, interpret,
+                        config)

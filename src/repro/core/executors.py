@@ -20,9 +20,17 @@ registered ``Executor`` object declaring:
                    (figs 5-7), scored so negotiation can rank rivals
   cost(spec)       abstract cost model (MACs + weighted extra HBM
                    traffic) for the cheapest-supported tier
-  vmem_bytes(spec) optional VMEM working-set model
-  execute(...)     run the spec, epilogue included (in-kernel when
-                   ``fuses_epilogue``, XLA ops otherwise)
+  vmem_bytes(spec, config)
+                   optional VMEM working-set model (also the pre-
+                   measurement pruner for candidate launch configs)
+  configs(spec)    ordered candidate *launch configs* (tile sizes,
+                   rows-per-step; DESIGN.md §9) — candidate 0 is the
+                   historical hard-coded geometry; ``config_supports``
+                   prunes, ``default_config`` model-picks absent
+                   measurement, ``autotune.measure_config`` sweeps
+  execute(...)     run the spec under a launch config, epilogue
+                   included (in-kernel when ``fuses_epilogue``, XLA
+                   ops otherwise)
 
 ``convspec.plan()`` is pure negotiation over these declarations
 (forced > measured cache > heuristic claims > cheapest supported);
@@ -32,8 +40,11 @@ call, not a planner edit (README "Registering a third-party executor").
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+import inspect
 from collections.abc import Mapping as _MappingABC
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Iterable, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -52,6 +63,92 @@ def _is_small(spec) -> bool:
     """The paper's small-batch/small-spatial region (figs 5-7)."""
     n, h = spec.in_shape[0], spec.in_shape[1]
     return n == 1 or (h <= 14 and n <= 16)
+
+
+# ---------------------------------------------------------------------------
+# launch configurations (DESIGN.md §9)
+
+@dataclasses.dataclass(frozen=True)
+class LaunchConfig:
+    """One launch configuration: named integer kernel-geometry dims.
+
+    Immutable and hashable (it rides inside frozen ``ConvPlan``s) and
+    JSON-round-trippable via ``as_dict`` (the persisted autotune cache).
+    An *empty* config (the untunable executors' only candidate) is
+    falsy, so callers can write ``if plan.config: ...``.
+    """
+    dims: Tuple[Tuple[str, int], ...] = ()
+
+    @classmethod
+    def of(cls, value) -> "LaunchConfig":
+        """Coerce any accepted spelling (LaunchConfig | mapping of
+        str -> int | None) into a LaunchConfig."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, _MappingABC):
+            try:
+                dims = tuple(sorted((str(k), int(v))
+                                    for k, v in value.items()))
+            except (TypeError, ValueError) as e:
+                raise ValueError(f"launch-config dims must be str -> int; "
+                                 f"got {dict(value)!r}") from e
+            return cls(dims)
+        raise ValueError(f"cannot build a LaunchConfig from {value!r}")
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.dims)
+
+    def get(self, name: str, default: Optional[int] = None) -> Optional[int]:
+        for k, v in self.dims:
+            if k == name:
+                return v
+        return default
+
+    def __getitem__(self, name: str) -> int:
+        v = self.get(name)
+        if v is None:
+            raise KeyError(name)
+        return v
+
+    def __contains__(self, name: str) -> bool:
+        return self.get(name) is not None
+
+    def __bool__(self) -> bool:
+        return bool(self.dims)
+
+    def key(self) -> str:
+        """Stable one-token rendering for explain()/benchmark rows."""
+        return ",".join(f"{k}={v}" for k, v in self.dims) or "-"
+
+
+def _dedup_configs(dicts: Iterable[Dict[str, int]]
+                   ) -> Tuple[LaunchConfig, ...]:
+    """Ordered, deduplicated candidate list (clamped candidates often
+    collapse on small paper shapes — e.g. every tp > N*OH*OW)."""
+    out, seen = [], set()
+    for d in dicts:
+        c = LaunchConfig.of(d)
+        if c.dims not in seen:
+            seen.add(c.dims)
+            out.append(c)
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=None)
+def _accepts_config(fn) -> bool:
+    """Does ``fn`` (an executor method) take a ``config`` kwarg?
+    Pre-config third-party overrides — 5-argument ``_execute``,
+    ``vmem_bytes(self, spec)`` — keep their old signatures and are
+    called without one."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):            # builtins/C callables
+        return False
+    return ("config" in params
+            or any(p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in params.values()))
 
 
 class Executor:
@@ -79,6 +176,10 @@ class Executor:
     fuses_epilogue: bool = False
     #: forward the planner's interpret flag (Pallas executors)
     takes_interpret: bool = False
+    #: names of the launch-config dims this executor can tune; () means
+    #: untunable (library/XLA executors — one empty config, nothing to
+    #: sweep)
+    tunable: Tuple[str, ...] = ()
 
     # -- capability ------------------------------------------------------
     def supports(self, spec) -> Tuple[bool, str]:
@@ -97,6 +198,68 @@ class Executor:
 
     def _supports(self, spec) -> Tuple[bool, str]:
         return True, "generic algorithm"
+
+    # -- tuning space (DESIGN.md §9) -------------------------------------
+    def configs(self, spec) -> Tuple[LaunchConfig, ...]:
+        """Ordered candidate launch configs for ``spec``.
+
+        Candidate 0 is the historical hard-coded geometry (the safe
+        default the kernel shipped with); candidates are clamped to the
+        spec's dims but NOT yet feasibility-pruned — pair with
+        ``config_supports`` (the measured sweep and ``default_config``
+        both do).  Untunable executors expose one empty config.
+        """
+        return (LaunchConfig(),)
+
+    def config_supports(self, spec, config) -> Tuple[bool, str]:
+        """Can this executor run ``spec`` under ``config`` exactly?
+
+        Common gates (declared tunable dims, positive values, the VMEM
+        budget via ``vmem_bytes``) live here; geometry-specific rules go
+        in ``_config_supports``.
+        """
+        config = LaunchConfig.of(config)
+        unknown = [k for k, _ in config.dims if k not in self.tunable]
+        if unknown:
+            return False, (f"{self.name} has no tunable dim(s) {unknown} "
+                           f"(tunable: {list(self.tunable) or 'none'})")
+        bad = [(k, v) for k, v in config.dims if v < 1]
+        if bad:
+            return False, f"launch dims must be >= 1; got {bad}"
+        ok, why = self._config_supports(spec, config)
+        if not ok:
+            return False, why
+        # pre-config third-party overrides (vmem_bytes(self, spec)) are
+        # consulted without the config argument
+        if _accepts_config(type(self).vmem_bytes):
+            need = self.vmem_bytes(spec, config)
+        else:
+            need = self.vmem_bytes(spec)
+        if need is not None and need > FUSED_VMEM_BUDGET:
+            return False, (f"config [{config.key()}] working set "
+                           f"{need / 2**20:.1f} MB > "
+                           f"{FUSED_VMEM_BUDGET / 2**20:.0f} MB VMEM budget")
+        return True, why
+
+    def _config_supports(self, spec, config) -> Tuple[bool, str]:
+        return True, "config geometry ok"
+
+    def config_cost(self, spec, config) -> float:
+        """Abstract cost of running ``spec`` under ``config`` — only has
+        to *rank* candidates (``default_config`` minimizes it; ties keep
+        the earliest candidate).  Tunable executors model grid-step
+        count (bigger feasible blocks = fewer steps = fuller MXU)."""
+        return 0.0
+
+    def default_config(self, spec) -> LaunchConfig:
+        """Model-chosen launch config absent measurement: the cheapest
+        VMEM-feasible candidate by ``config_cost`` (stable min — ties
+        keep candidate 0, the historical geometry)."""
+        cands = self.configs(spec)
+        feasible = [c for c in cands if self.config_supports(spec, c)[0]]
+        if not feasible:
+            return cands[0]
+        return min(feasible, key=lambda c: self.config_cost(spec, c))
 
     # -- negotiation inputs ----------------------------------------------
     def heuristic_claim(self, spec, backend: str
@@ -127,8 +290,11 @@ class Executor:
         once (materialized temporaries, transform tensors, ...)."""
         return 0.0
 
-    def vmem_bytes(self, spec) -> Optional[int]:
-        """Static VMEM working-set estimate, or None (no VMEM model)."""
+    def vmem_bytes(self, spec, config=None) -> Optional[int]:
+        """Static VMEM working-set estimate under ``config`` (None: the
+        default hard-coded geometry), or None when there is no VMEM
+        model.  ``config_supports`` prunes candidates through this
+        before any measurement happens."""
         return None
 
     def fallback(self, spec) -> Tuple[str, str]:
@@ -137,20 +303,27 @@ class Executor:
         return "lax", "library conv covers all geometries"
 
     # -- execution -------------------------------------------------------
-    def execute(self, spec, x, w, bias=None, interpret=None):
+    def execute(self, spec, x, w, bias=None, interpret=None, config=None):
         """Run ``spec`` on ``(x, w, bias)``, epilogue included.
 
         Operands are cast to the spec dtype first (under a bf16
         precision policy the master weights stay fp32); the contraction
         accumulates per ``accum``.  Non-fusing executors apply the
-        bias/ReLU epilogue as XLA ops after the bare conv.
+        bias/ReLU epilogue as XLA ops after the bare conv.  ``config``
+        is the plan's resolved launch config; executors whose
+        ``_execute`` predates the config era (5-argument third-party
+        subclasses) are called without it.
         """
         dtype = jnp.dtype(spec.dtype)
         x = x if x.dtype == dtype else x.astype(dtype)
         w = w if w.dtype == dtype else w.astype(dtype)
         if bias is not None and bias.dtype != dtype:
             bias = bias.astype(dtype)
-        y = self._execute(spec, x, w, bias, interpret)
+        if _accepts_config(type(self)._execute):
+            y = self._execute(spec, x, w, bias, interpret,
+                              config=LaunchConfig.of(config))
+        else:
+            y = self._execute(spec, x, w, bias, interpret)
         if not self.fuses_epilogue:
             if spec.has_bias:
                 y = y + bias
@@ -423,11 +596,50 @@ class CuconvExecutor(Executor):
         return 20, "default cuConv region"
 
 
+# Tiled-GEMM launch candidates shared by the 1x1 and two-stage Pallas
+# kernels: (tp, tm, tc) = pixel / out-channel / contraction tiles.
+# Candidate 0 is the historical hard-coded geometry; the rest widen or
+# shrink each axis (clamped per spec, so small paper shapes dedupe).
+_GEMM_TILES = (
+    (256, 128, 512),
+    (512, 256, 512),
+    (256, 512, 512),
+    (128, 128, 256),
+    (512, 128, 1024),
+    (128, 64, 128),
+)
+
+
+def _gemm_tile_configs(p: int, m: int, c: int) -> Tuple[LaunchConfig, ...]:
+    return _dedup_configs(
+        {"tp": min(tp, p), "tm": min(tm, m), "tc": min(tc, c)}
+        for tp, tm, tc in _GEMM_TILES)
+
+
+def _gemm_tile_vmem(config: LaunchConfig, itemsize: int) -> int:
+    """Live-block model of one tiled GEMM step: x/w input blocks double
+    buffered, output block plus its f32 VMEM accumulator."""
+    tp = config.get("tp", 256)
+    tm = config.get("tm", 128)
+    tc = config.get("tc", 512)
+    return 2 * itemsize * (tp * tc + tc * tm) + (itemsize + 4) * tp * tm
+
+
+def _gemm_tile_steps(p: int, m: int, c: int, config: LaunchConfig) -> float:
+    """Grid-step count of the tiled GEMM under ``config`` (the ranking
+    ``config_cost`` minimizes)."""
+    tp = min(config.get("tp", 256), p)
+    tm = min(config.get("tm", 128), m)
+    tc = min(config.get("tc", 512), c)
+    return (-(-p // tp)) * (-(-m // tm)) * (-(-c // tc))
+
+
 class Conv1x1PallasExecutor(Executor):
     """Dedicated 1x1 GEMM Pallas kernel: all N*H*W pixels MXU-tiled —
     the paper's best-case region on its natural kernel."""
     name = "conv1x1_pallas"
     takes_interpret = True
+    tunable = ("tp", "tm", "tc")
 
     def _supports(self, spec):
         if (not spec.is_1x1 or not spec.unit_stride
@@ -442,12 +654,34 @@ class Conv1x1PallasExecutor(Executor):
             return 90, "1x1: dedicated GEMM kernel"
         return None
 
+    def _gemm_dims(self, spec):
+        n, h, w, c = spec.in_shape
+        return n * h * w, spec.filter_shape[3], c
+
+    def configs(self, spec):
+        return _gemm_tile_configs(*self._gemm_dims(spec))
+
+    def vmem_bytes(self, spec, config=None):
+        return _gemm_tile_vmem(LaunchConfig.of(config),
+                               jnp.dtype(spec.dtype).itemsize)
+
+    def config_cost(self, spec, config):
+        return _gemm_tile_steps(*self._gemm_dims(spec), config)
+
+    def _execute(self, spec, x, w, bias, interpret, config=None):
+        from repro.kernels import ops
+        cfg = LaunchConfig.of(config)
+        return ops.conv1x1(x, w, interpret=interpret,
+                           tp=cfg.get("tp", 256), tm=cfg.get("tm", 128),
+                           tc=cfg.get("tc", 512))
+
 
 class TwoStagePallasExecutor(Executor):
     """Faithful two-kernel Pallas pipeline (stride 1): HBM temporaries +
     stage-2 sum — the fused kernel's VMEM-bounded fallback."""
     name = "cuconv_two_stage_pallas"
     takes_interpret = True
+    tunable = ("tp", "tm", "tc")
 
     def _supports(self, spec):
         if not spec.unit_stride:
@@ -459,19 +693,55 @@ class TwoStagePallasExecutor(Executor):
         kh, kw = spec.filter_shape[:2]
         return 2.0 * kh * kw * n * oh * ow * m * 4
 
+    def _gemm_dims(self, spec):
+        n, oh, ow, m = spec.out_shape
+        return n * oh * ow, m, spec.filter_shape[2]
+
+    def configs(self, spec):
+        return _gemm_tile_configs(*self._gemm_dims(spec))
+
+    def vmem_bytes(self, spec, config=None):
+        return _gemm_tile_vmem(LaunchConfig.of(config),
+                               jnp.dtype(spec.dtype).itemsize)
+
+    def config_cost(self, spec, config):
+        p, m, c = self._gemm_dims(spec)
+        kh, kw = spec.filter_shape[:2]
+        return kh * kw * _gemm_tile_steps(p, m, c, config)
+
+    def _execute(self, spec, x, w, bias, interpret, config=None):
+        from repro.kernels import ops
+        cfg = LaunchConfig.of(config)
+        return ops.cuconv_two_stage(x, w, spec.padding, interpret=interpret,
+                                    tp=cfg.get("tp", 256),
+                                    tm=cfg.get("tm", 128),
+                                    tc=cfg.get("tc", 512))
+
 
 class FusedPallasExecutor(Executor):
     """The fused Pallas TPU kernel: any stride >= 1, per-tap partials
     accumulated in VMEM, bias+ReLU epilogue fused before the single HBM
-    write."""
+    write.
+
+    Tuning space: ``tm`` (output-channel tile) x ``rows`` (output rows
+    per grid step — the multi-row blocking that lets short-``OW`` paper
+    shapes feed the MXU a (rows*OW x C) window instead of one row).
+    ``rows >= 2`` is only geometrically valid when ``KH - 1 <= rows*sh``
+    (the kernel's two-staged-block halo rule) and ``rows <= OH``; both
+    are ``config_supports`` rules, so stale persisted configs from an
+    earlier geometry are re-resolved, never served.
+    """
     name = "cuconv_pallas"
     fuses_epilogue = True
     takes_interpret = True
+    tunable = ("tm", "rows")
 
-    def vmem_bytes(self, spec):
+    def vmem_bytes(self, spec, config=None):
         from repro.kernels.cuconv_fused import vmem_bytes
+        cfg = LaunchConfig.of(config)
         itemsize = jnp.dtype(spec.dtype).itemsize
         return vmem_bytes(spec.in_shape, spec.filter_shape,
+                          tm=cfg.get("tm", 128), rows=cfg.get("rows", 1),
                           pad=spec.padding, stride=spec.stride,
                           itemsize=itemsize)
 
@@ -482,6 +752,33 @@ class FusedPallasExecutor(Executor):
                            f"> {FUSED_VMEM_BUDGET / 2**20:.0f} MB "
                            f"VMEM budget")
         return True, "fused Pallas kernel fits VMEM"
+
+    def configs(self, spec):
+        _, oh, _, m = spec.out_shape
+        return _dedup_configs(
+            {"tm": min(tm, m), "rows": min(rows, oh)}
+            for tm in (128, 256, 512)          # candidate 0: tm=128, rows=1
+            for rows in (1, 2, 4, 8))
+
+    def _config_supports(self, spec, config):
+        rows = config.get("rows", 1)
+        _, oh, _, _ = spec.out_shape
+        kh = spec.filter_shape[0]
+        sh = spec.stride[0]
+        if rows > oh:
+            return False, (f"rows={rows} exceeds OH={oh} for "
+                           f"{spec.key()}")
+        if rows > 1 and kh - 1 > rows * sh:
+            return False, (f"multi-row blocking needs KH-1 <= rows*sh; "
+                           f"got KH={kh}, rows={rows}, sh={sh}")
+        return True, "config geometry ok"
+
+    def config_cost(self, spec, config):
+        n, oh, _, m = spec.out_shape
+        kh, kw = spec.filter_shape[:2]
+        tm = min(config.get("tm", 128), m)
+        rows = max(1, min(config.get("rows", 1), oh))
+        return n * (-(-oh // rows)) * (-(-m // tm)) * kh * kw
 
     def heuristic_claim(self, spec, backend):
         if backend != "tpu":
@@ -502,14 +799,16 @@ class FusedPallasExecutor(Executor):
                     "two-stage kernels bound the VMEM working set")
         return "cuconv", "fused-tap XLA path handles any stride"
 
-    def _execute(self, spec, x, w, bias, interpret):
+    def _execute(self, spec, x, w, bias, interpret, config=None):
         # epilogue fused into the kernel: the accumulator takes
         # bias+activation in VMEM before its single HBM write
         from repro.kernels import ops
+        cfg = LaunchConfig.of(config)
         return ops.cuconv_fused(
             x, w, spec.padding, stride=spec.stride,
             bias=bias if spec.has_bias else None,
             activation="relu" if spec.wants_relu else None,
+            tm=cfg.get("tm", 128), rows=cfg.get("rows", 1),
             interpret=interpret)
 
 

@@ -53,7 +53,7 @@ import jax.numpy as jnp
 
 from repro.core.convspec import (ConvPlan, ConvSpec, canonical_dtype,
                                  normalize_pad, normalize_stride, out_size,
-                                 plan)
+                                 plan, resolve_config)
 from repro.core.plancache import JsonCache
 
 LayerSpec = Tuple[int, int, int, int]          # (kh, kw, c_out, stride)
@@ -572,8 +572,10 @@ class GraphPlan:
     """Whole-network plan: one resolved ConvPlan per conv node, keyed by
     node name.
 
-    Mutable only through ``warmup(measure=True)``, which may swap node
-    plans for measured winners; execution itself never re-plans.
+    Mutable only through ``warmup(tune=...)`` (``measure=True`` is the
+    back-compat spelling of ``tune="algo"``), which may swap node plans
+    for measured ``(algorithm, launch config)`` winners; execution
+    itself never re-plans.
     """
     graph: Graph
     conv_plans: Dict[str, ConvPlan]
@@ -609,10 +611,12 @@ class GraphPlan:
                 n, h, w, c = s.in_shape
                 kh, kw, _, m = s.filter_shape
                 grp = f" g{s.groups}" if s.groups != 1 else ""
+                cfg = (f" cfg[{p.config_source}]={p.config.key()}"
+                       if p.config else "")
                 lines.append(
                     f"  {node.name:>8s}  {h:>3d}x{w:<3d} c{c:<4d} {kh}x{kw}/"
                     f"{s.stride[0]}{grp} m{m:<4d} {s.dtype:>9s} -> "
-                    f"{p.algorithm:24s} [{p.source}] {p.reason}")
+                    f"{p.algorithm:24s} [{p.source}]{cfg} {p.reason}")
             else:
                 out = self.graph.shapes[node.name]
                 lines.append(f"  {node.name:>8s}  {node.descriptor():50s} "
@@ -693,44 +697,37 @@ class GraphPlan:
         return values[self.graph.output]
 
     # -- warmup / autotune ----------------------------------------------
-    def warmup(self, *, measure: bool = False, repeats: int = 3) -> Dict:
+    def warmup(self, *, measure: bool = False,
+               tune: Optional[str] = None, repeats: int = 3) -> Dict:
         """Compile (and optionally measure-autotune) every conv node in
         one sweep.
 
-        ``measure=True`` runs the exhaustive per-node timing sweep
-        (``autotune.measure_algorithm`` with the node's epilogue and
-        groups threaded through), re-resolves each conv node against the
-        freshly persisted winners, and re-persists the graph-level entry
-        — after which the plan serves inference with zero further plan()
-        resolutions.
+        ``tune="algo"`` runs the exhaustive per-node executor timing
+        sweep (``autotune.tune_spec`` with the node's epilogue and
+        groups threaded through); ``tune="full"`` then sweeps each
+        winner's candidate *launch configs* (VMEM-pruned before timing).
+        Either re-resolves each conv node against the freshly persisted
+        winners and re-persists the graph-level entry — after which the
+        plan serves inference with zero further plan() resolutions and
+        zero re-measurement.  ``measure=True`` is the back-compat
+        spelling of ``tune="algo"``.
 
         Returns ``{"nodes": [...], "total_ms": float}`` with one
-        algorithm/source/compile-time row per conv node.
+        algorithm/config/source/compile-time row per conv node.
         """
         from repro.core import autotune
-        if measure and self.backend != jax.default_backend():
-            # measure_algorithm times on the process's default backend;
-            # recording those numbers under another backend's key would
-            # silently discard the sweep
-            raise ValueError(
-                f"measured warmup must run on the plan's backend: plan is "
-                f"for {self.backend!r} but this process runs "
-                f"{jax.default_backend()!r}")
+        if measure and tune is None:
+            tune = "algo"
         t_start = time.perf_counter()
-        if measure:
+        if tune is not None:
             new_plans: Dict[str, ConvPlan] = {}
+            # tune-mode and backend-mismatch validation live in
+            # tune_spec (one home), which raises before any node is
+            # measured
             for node in self.graph.conv_nodes:
-                s = node.spec
-                dtype = jnp.dtype(s.dtype)
-                autotune.measure_algorithm(
-                    jnp.zeros(s.in_shape, dtype),
-                    jnp.zeros(s.filter_shape, dtype),
-                    stride=s.stride, padding=s.padding, repeats=repeats,
-                    bias=(jnp.zeros((s.filter_shape[3],), dtype)
-                          if s.has_bias else None),
-                    activation="relu" if s.wants_relu else None,
-                    groups=s.groups)
-                new_plans[node.name] = plan(s, backend=self.backend)
+                autotune.tune_spec(node.spec, tune=tune,
+                                   backend=self.backend, repeats=repeats)
+                new_plans[node.name] = plan(node.spec, backend=self.backend)
             self.conv_plans = new_plans
             self._jitted.clear()        # stale traces must not serve on
             _persist(self.graph, self.backend, self.conv_plans)
@@ -746,6 +743,8 @@ class GraphPlan:
             self._node_fn(node.name)(x, w, b).block_until_ready()
             rows.append({"node": node.name, "key": s.key(),
                          "algorithm": p.algorithm, "source": p.source,
+                         "config": (p.config.as_dict() if p.config else {}),
+                         "config_source": p.config_source,
                          "compile_ms": (time.perf_counter() - t0) * 1e3})
         return {"nodes": rows,
                 "total_ms": (time.perf_counter() - t_start) * 1e3}
@@ -822,6 +821,11 @@ def _plans_from_cache(graph: Graph,
         if (measured is not None and measured != algo
                 and executors.capable(measured, spec)):
             return None
+        # launch configs are per-spec state (autotune.json), not part of
+        # the graph entry: re-resolve so a measured config recorded
+        # since — or one gone stale — is honored without re-measurement
+        cfg, cfg_src = resolve_config(spec, algo, backend)
         plans[node.name] = ConvPlan(spec, algo, "graph_cache",
-                                    "persisted graph-level plan", backend)
+                                    "persisted graph-level plan", backend,
+                                    config=cfg, config_source=cfg_src)
     return plans

@@ -5,6 +5,12 @@ One small concern, shared by the measured-autotune cache
 a string-keyed JSON map that survives across processes, merges with
 concurrent writers instead of clobbering them, and degrades to
 in-memory-only on a read-only filesystem.
+
+The store itself is schema-agnostic; both clients persist
+*schema-versioned* entries (``graph.GRAPH_SCHEMA`` dicts,
+``autotune.AUTOTUNE_SCHEMA`` ``(algorithm, config)`` dicts) and drop
+unversioned or foreign-schema values on read, so old caches are
+re-resolved rather than misdecoded.
 """
 from __future__ import annotations
 

@@ -1,9 +1,39 @@
-"""Pallas API shims across jax versions.
+"""Pallas API shims and shared kernel-geometry helpers.
 
 `pltpu.CompilerParams` was `pltpu.TPUCompilerParams` before jax 0.5;
 resolve whichever this jaxlib provides so kernels are version-portable.
+
+`clamp_tiles` is the one home of the tile-clamp + pad arithmetic that
+every Pallas wrapper used to copy-paste (`tm = min(tm, M)`,
+`pm = (-M) % tm`); `kernels/ops.py` re-exports it for callers outside
+the kernel package.
 """
+from typing import Sequence, Tuple
+
 from jax.experimental.pallas import tpu as _pltpu
 
 CompilerParams = getattr(_pltpu, "CompilerParams", None) or getattr(
     _pltpu, "TPUCompilerParams")
+
+
+def clamp_tiles(dims: Sequence[int], tiles: Sequence[int]
+                ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Clamp tile sizes to their dims and derive the pad-to-multiple.
+
+    Returns ``(clamped, pads)`` where ``clamped[i] = min(tiles[i],
+    dims[i])`` and ``pads[i] = (-dims[i]) % clamped[i]`` — so
+    ``dims[i] + pads[i]`` is the padded extent and
+    ``(dims[i] + pads[i]) // clamped[i]`` the grid size along that axis.
+    Non-positive tile sizes are a caller bug and raise.
+    """
+    if len(dims) != len(tiles):
+        raise ValueError(f"{len(dims)} dims but {len(tiles)} tile sizes")
+    clamped, pads = [], []
+    for d, t in zip(dims, tiles):
+        t = int(t)
+        if t < 1:
+            raise ValueError(f"tile sizes must be >= 1; got {tiles}")
+        t = min(t, int(d))
+        clamped.append(t)
+        pads.append((-int(d)) % t)
+    return tuple(clamped), tuple(pads)

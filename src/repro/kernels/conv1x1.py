@@ -40,8 +40,8 @@ def conv1x1_gemm(x2d, w, tp=256, tm=128, tc=512, interpret=True):
     """x2d: (P, C) pixels-major; w: (C, M).  Returns (P, M) in x2d.dtype."""
     P, C = x2d.shape
     _, M = w.shape
-    tp, tm, tc = min(tp, P), min(tm, M), min(tc, C)
-    pp, pm, pc = (-P) % tp, (-M) % tm, (-C) % tc
+    (tp, tm, tc), (pp, pm, pc) = _compat.clamp_tiles((P, M, C),
+                                                     (tp, tm, tc))
     xp = jnp.pad(x2d, ((0, pp), (0, pc)))
     wp = jnp.pad(w, ((0, pc), (0, pm)))
     grid = ((P + pp) // tp, (M + pm) // tm, (C + pc) // tc)

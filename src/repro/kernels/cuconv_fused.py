@@ -14,12 +14,29 @@ Napkin math (7x7x832 in, 3x3 filter, M=384, f32 — paper table 4 "A"):
 Stage 1 dominates cuConv time in the paper (91-99 %); killing the
 temporary stream attacks its memory term directly.
 
-Grid: (N, OH, M_tiles, TAPS).  Per step: one padded input row
-(1, 1, Wp, C) is selected by index_map *element* offset oh*sh + tap_dy
-(legal because the H block dim is 1); the in-row X window for tap_dx at
-stride sw is a dynamic_slice of length OW*sw reshaped to (OW, sw, C) and
-column-sampled — a slice+reshape that stays TPU-legal (no gather); the
-(OW x C) window hits the MXU against the (C x TM) tap matrix.
+Launch configuration (DESIGN.md §9): the kernel geometry is *tunable* —
+``tm`` is the output-channel tile, ``rows`` the number of output rows
+each grid step produces.
+
+``rows=1`` (the historical geometry) — grid (N, OH, M_tiles, TAPS).
+Per step: one padded input row (1, 1, Wp, C) is selected by index_map
+*element* offset oh*sh + tap_dy (legal because the H block dim is 1);
+the in-row X window for tap_dx at stride sw is a dynamic_slice of
+length OW*sw reshaped to (OW, sw, C) and column-sampled — a
+slice+reshape that stays TPU-legal (no gather); the (OW x C) window
+hits the MXU against the (C x TM) tap matrix.
+
+``rows>=2`` (multi-row output blocking) — grid (N, ceil(OH/rows),
+M_tiles, TAPS).  The short-``OW`` paper configs (7x7, 13x13) only fill
+a handful of MXU sublanes with a single output row; multi-row blocking
+feeds a (rows*OW x C) window per step instead.  Element-offset
+index_maps need a block dim of 1, so the halo is covered differently
+here: TWO adjacent aligned H-blocks of ``rows*sh`` input rows each are
+staged per step, concatenated in VMEM, and the tap's (rows, OW) window
+is carved out with one dynamic_slice + reshape (strided row/column
+sampling, no gather).  Validity: KH - 1 <= rows*sh, so every tap's
+window lands inside the two staged blocks — ``config_supports`` on the
+executor prunes the rest.
 
 Epilogue (DESIGN.md §4): on the final tap the still-VMEM-resident
 accumulator takes bias add + activation before the single HBM write —
@@ -79,14 +96,66 @@ def _make_kernel(kw: int, ow: int, sw: int, taps: int, activation,
     return _kernel
 
 
+def _make_multirow_kernel(kw: int, ow: int, sh: int, sw: int, rows: int,
+                          taps: int, activation, has_bias: bool):
+    def _kernel(*refs):
+        if has_bias:
+            xa_ref, xb_ref, w_ref, b_ref, o_ref = refs
+        else:
+            xa_ref, xb_ref, w_ref, o_ref = refs
+        t = pl.program_id(3)
+        di = t // kw
+        dj = jax.lax.rem(t, kw)
+        # two adjacent aligned H blocks of rows*sh input rows each; the
+        # tap's window starts at local offset di (<= rows*sh by the
+        # KH - 1 <= rows*sh validity rule), so it always fits the pair
+        big = jnp.concatenate([xa_ref[0], xb_ref[0]], axis=0)
+        C = big.shape[-1]
+        blk = jax.lax.dynamic_slice(
+            big, (di, dj, 0), (rows * sh, ow * sw, C))
+        if sh > 1:
+            blk = blk.reshape(rows, sh, ow * sw, C)[:, 0]   # (rows, OW*sw, C)
+        if sw > 1:
+            blk = blk.reshape(rows, ow, sw, C)[:, :, 0, :]  # (rows, OW, C)
+        win = blk.reshape(rows * ow, C)
+        part = jnp.dot(win, w_ref[0, 0],
+                       preferred_element_type=jnp.float32)  # (rows*OW, TM)
+        part = part.reshape(rows, ow, part.shape[-1])
+
+        @pl.when(t == 0)
+        def _init():
+            o_ref[0] = part
+
+        @pl.when(t > 0)
+        def _acc():
+            o_ref[0] += part
+
+        if has_bias or activation is not None:
+            @pl.when(t == taps - 1)
+            def _epilogue():
+                acc = o_ref[0]
+                if has_bias:
+                    acc = acc + b_ref[0].astype(jnp.float32)
+                if activation == "relu":
+                    acc = jnp.maximum(acc, 0.0)
+                o_ref[0] = acc
+
+    return _kernel
+
+
 @functools.partial(jax.jit, static_argnames=("stride", "padding",
-                                             "activation", "tm", "interpret"))
+                                             "activation", "tm", "rows",
+                                             "interpret"))
 def cuconv_fused(x, w, bias=None, stride=(1, 1), padding=(0, 0),
-                 activation=None, tm=128, interpret=True):
+                 activation=None, tm=128, rows=1, interpret=True):
     """x: (N, H, W, C) NHWC; w: (KH, KW, C, M) HWIO; stride (sh, sw) >= 1.
 
     bias: optional (M,) added on the final tap; activation: None | 'relu',
     applied after bias — both fused in VMEM before the output write.
+    ``tm``/``rows`` are the launch configuration (output-channel tile and
+    output rows per grid step); ``rows >= 2`` requires
+    ``KH - 1 <= rows*sh`` (the multi-row halo rule — the planner's
+    ``config_supports`` prunes invalid candidates).
     Returns (N, OH, OW, M) in x.dtype.
     """
     N, H, W, C = x.shape
@@ -95,56 +164,115 @@ def cuconv_fused(x, w, bias=None, stride=(1, 1), padding=(0, 0),
     ph, pw = padding
     Hp, Wp = H + 2 * ph, W + 2 * pw
     OH, OW = (Hp - KH) // sh + 1, (Wp - KW) // sw + 1
+    rows = min(int(rows), OH)
+    if rows < 1:
+        raise ValueError(f"rows must be >= 1; got {rows}")
+    if rows > 1 and KH - 1 > rows * sh:
+        raise ValueError(
+            f"multi-row blocking needs KH - 1 <= rows*sh to cover the tap "
+            f"halo from two aligned input blocks; got KH={KH}, rows={rows}, "
+            f"sh={sh}")
     # widen rows so every tap's strided window slice stays in bounds:
     # max start KW-1 plus slice length OW*sw (== Wp when sw == 1)
     Wpad = KW - 1 + OW * sw
-    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw + max(0, Wpad - Wp)), (0, 0)))
-    Wp = xp.shape[2]
-    tm = min(tm, M)
-    pm = (-M) % tm
+    (tm,), (pm,) = _compat.clamp_tiles((M,), (tm,))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pm)))
     has_bias = bias is not None
-    grid = (N, OH, (M + pm) // tm, KH * KW)
-    in_specs = [
-        # one padded input row; H-dim block=1 => element-level shift
-        pl.BlockSpec((1, 1, Wp, C),
-                     lambda n, oh, m, t: (n, oh * sh + t // KW, 0, 0)),
-        # the tap matrix F[di, dj] (C x TM), pinned in VMEM
-        pl.BlockSpec((1, 1, C, tm),
-                     lambda n, oh, m, t: (t // KW, jax.lax.rem(t, KW),
-                                          0, m)),
-    ]
-    operands = [xp, wp]
-    if has_bias:
-        bp = jnp.pad(bias.reshape(1, M), ((0, 0), (0, pm)))
-        in_specs.append(pl.BlockSpec((1, tm), lambda n, oh, m, t: (0, m)))
-        operands.append(bp)
-    out = pl.pallas_call(
-        _make_kernel(KW, OW, sw, KH * KW, activation, has_bias),
-        grid=grid,
-        in_specs=in_specs,
-        # output row revisited across all taps (index_map ignores t)
-        out_specs=pl.BlockSpec((1, 1, OW, tm),
-                               lambda n, oh, m, t: (n, oh, 0, m)),
-        out_shape=jax.ShapeDtypeStruct((N, OH, OW, M + pm), jnp.float32),
+    kw_common = dict(
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
         name="cuconv_fused",
+    )
+
+    if rows == 1:
+        xp = jnp.pad(x, ((0, 0), (ph, ph),
+                         (pw, pw + max(0, Wpad - Wp)), (0, 0)))
+        Wp = xp.shape[2]
+        grid = (N, OH, (M + pm) // tm, KH * KW)
+        in_specs = [
+            # one padded input row; H-dim block=1 => element-level shift
+            pl.BlockSpec((1, 1, Wp, C),
+                         lambda n, oh, m, t: (n, oh * sh + t // KW, 0, 0)),
+            # the tap matrix F[di, dj] (C x TM), pinned in VMEM
+            pl.BlockSpec((1, 1, C, tm),
+                         lambda n, oh, m, t: (t // KW, jax.lax.rem(t, KW),
+                                              0, m)),
+        ]
+        operands = [xp, wp]
+        if has_bias:
+            bp = jnp.pad(bias.reshape(1, M), ((0, 0), (0, pm)))
+            in_specs.append(pl.BlockSpec((1, tm),
+                                         lambda n, oh, m, t: (0, m)))
+            operands.append(bp)
+        out = pl.pallas_call(
+            _make_kernel(KW, OW, sw, KH * KW, activation, has_bias),
+            grid=grid,
+            in_specs=in_specs,
+            # output row revisited across all taps (index_map ignores t)
+            out_specs=pl.BlockSpec((1, 1, OW, tm),
+                                   lambda n, oh, m, t: (n, oh, 0, m)),
+            out_shape=jax.ShapeDtypeStruct((N, OH, OW, M + pm), jnp.float32),
+            **kw_common,
+        )(*operands)
+        return out[..., :M].astype(x.dtype)
+
+    # multi-row blocking: rows output rows per step from two adjacent
+    # aligned input blocks of B = rows*sh rows each
+    B = rows * sh
+    OHB = -(-OH // rows)
+    # H must cover block index OHB (the second staged block of the last
+    # step) => (OHB + 1) * B padded rows; extra rows are zeros and the
+    # outputs they feed are sliced away below
+    hpad_extra = max(0, (OHB + 1) * B - Hp)
+    xp = jnp.pad(x, ((0, 0), (ph, ph + hpad_extra),
+                     (pw, pw + max(0, Wpad - Wp)), (0, 0)))
+    Wp = xp.shape[2]
+    grid = (N, OHB, (M + pm) // tm, KH * KW)
+    in_specs = [
+        pl.BlockSpec((1, B, Wp, C), lambda n, oh, m, t: (n, oh, 0, 0)),
+        pl.BlockSpec((1, B, Wp, C), lambda n, oh, m, t: (n, oh + 1, 0, 0)),
+        pl.BlockSpec((1, 1, C, tm),
+                     lambda n, oh, m, t: (t // KW, jax.lax.rem(t, KW),
+                                          0, m)),
+    ]
+    operands = [xp, xp, wp]
+    if has_bias:
+        bp = jnp.pad(bias.reshape(1, M), ((0, 0), (0, pm)))
+        in_specs.append(pl.BlockSpec((1, tm), lambda n, oh, m, t: (0, m)))
+        operands.append(bp)
+    out = pl.pallas_call(
+        _make_multirow_kernel(KW, OW, sh, sw, rows, KH * KW, activation,
+                              has_bias),
+        grid=grid,
+        in_specs=in_specs,
+        # (rows, OW, TM) output block revisited across all taps
+        out_specs=pl.BlockSpec((1, rows, OW, tm),
+                               lambda n, oh, m, t: (n, oh, 0, m)),
+        out_shape=jax.ShapeDtypeStruct((N, OHB * rows, OW, M + pm),
+                                       jnp.float32),
+        **kw_common,
     )(*operands)
-    return out[..., :M].astype(x.dtype)
+    return out[:, :OH, :, :M].astype(x.dtype)
 
 
-def vmem_bytes(x_shape, w_shape, tm=128, pad=(0, 0), stride=(1, 1),
+def vmem_bytes(x_shape, w_shape, tm=128, rows=1, pad=(0, 0), stride=(1, 1),
                itemsize=4):
-    """Static VMEM footprint estimate for the fused kernel's live blocks."""
+    """Static VMEM footprint estimate for the fused kernel's live blocks
+    under launch config ``(tm, rows)``."""
     N, H, W, C = x_shape
     KH, KW, _, M = w_shape
     sh, sw = stride
     Wp = W + 2 * pad[1]
     OW = (Wp - KW) // sw + 1
-    row = (KW - 1 + OW * sw) * C * itemsize
-    wtap = C * min(tm, M) * itemsize
-    out = OW * min(tm, M) * 4                # f32 accumulator
-    return 2 * (row + wtap) + out            # x2: double buffering of inputs
+    OH = (H + 2 * pad[0] - KH) // sh + 1
+    rows = max(1, min(int(rows), OH))
+    tm = min(int(tm), M)
+    wtap = C * tm * itemsize
+    out = rows * OW * tm * 4                     # f32 accumulator
+    row_bytes = (KW - 1 + OW * sw) * C * itemsize
+    if rows == 1:
+        return 2 * (row_bytes + wtap) + out      # x2: input double buffering
+    blk = rows * sh * row_bytes                  # one aligned H block
+    return 2 * (2 * blk + wtap) + out            # two staged blocks per step

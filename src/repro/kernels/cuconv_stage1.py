@@ -46,8 +46,8 @@ def stage1_tap_gemm(xs, w, tp=256, tm=128, tc=512, interpret=True):
     """
     T, P, C = xs.shape
     _, _, M = w.shape
-    tp, tm, tc = min(tp, P), min(tm, M), min(tc, C)
-    pp, pm, pc = (-P) % tp, (-M) % tm, (-C) % tc
+    (tp, tm, tc), (pp, pm, pc) = _compat.clamp_tiles((P, M, C),
+                                                     (tp, tm, tc))
     xsp = jnp.pad(xs, ((0, 0), (0, pp), (0, pc)))
     wp = jnp.pad(w, ((0, 0), (0, pc), (0, pm)))
     grid = (T, (P + pp) // tp, (M + pm) // tm, (C + pc) // tc)

@@ -29,8 +29,7 @@ def stage2_tap_sum(temps, tp=256, tm=256, out_dtype=jnp.float32,
                    interpret=True):
     """temps: (T, P, M) stage-1 partials -> (P, M) output plane sums."""
     T, P, M = temps.shape
-    tp, tm = min(tp, P), min(tm, M)
-    pp, pm = (-P) % tp, (-M) % tm
+    (tp, tm), (pp, pm) = _compat.clamp_tiles((P, M), (tp, tm))
     tpad = jnp.pad(temps, ((0, 0), (0, pp), (0, pm)))
     grid = ((P + pp) // tp, (M + pm) // tm)
     out = pl.pallas_call(

@@ -17,6 +17,7 @@ from repro.kernels import (conv1x1 as _c1, cuconv_stage1 as _s1,
 
 
 from repro.core.convspec import normalize_stride as _norm_stride  # one home
+from repro.kernels._compat import clamp_tiles  # noqa: F401  (re-export)
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -25,21 +26,30 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
     return jax.default_backend() != "tpu"
 
 
-def conv1x1(x, w, interpret=None):
-    """x: (N, H, W, C); w: (1, 1, C, M) or (C, M)."""
+def conv1x1(x, w, interpret=None, tp=256, tm=128, tc=512):
+    """x: (N, H, W, C); w: (1, 1, C, M) or (C, M).
+
+    ``tp/tm/tc`` are the GEMM launch tiles (pixels/out-channels/
+    contraction); the defaults are the historical hard-coded geometry.
+    """
     if w.ndim == 4:
         w = w[0, 0]
     N, H, W_, C = x.shape
-    out = _c1.conv1x1_gemm(x.reshape(N * H * W_, C), w,
+    out = _c1.conv1x1_gemm(x.reshape(N * H * W_, C), w, tp=tp, tm=tm, tc=tc,
                            interpret=_auto_interpret(interpret))
     return out.reshape(N, H, W_, -1)
 
 
-def cuconv_two_stage(x, w, padding=(0, 0), interpret=None):
+def cuconv_two_stage(x, w, padding=(0, 0), interpret=None,
+                     tp=256, tm=128, tc=512):
     """Faithful two-kernel cuConv (stride 1): HBM temporaries + sum.
 
     Policy-free executor: which inputs take this path (vs the fused or
     1x1 kernels) is decided by core.convspec.plan, not here.
+    ``tp/tm/tc`` thread the launch tiles into stage 1; stage 2 rides the
+    same pixel tile but keeps its own out-channel tile default (it is a
+    bandwidth-bound reduction — 1-9 % of total time in the paper — and
+    its historical default differs from stage 1's).
     """
     from repro.core.cuconv import _tap_views  # shared view builder
     interp = _auto_interpret(interpret)
@@ -51,22 +61,24 @@ def cuconv_two_stage(x, w, padding=(0, 0), interpret=None):
     views = _tap_views(xp, KH, KW, OH, OW, 1)
     xs = jnp.stack([v.reshape(N * OH * OW, C) for v in views], 0)
     temps = _s1.stage1_tap_gemm(xs, w.reshape(KH * KW, C, M),
-                                interpret=interp)
-    out = _s2.stage2_tap_sum(temps, interpret=interp)
+                                tp=tp, tm=tm, tc=tc, interpret=interp)
+    out = _s2.stage2_tap_sum(temps, tp=tp, interpret=interp)
     return out.reshape(N, OH, OW, M).astype(x.dtype)
 
 
 def cuconv_fused(x, w, padding=(0, 0), stride=1, bias=None, activation=None,
-                 interpret=None):
+                 interpret=None, tm=128, rows=1):
     """Single-kernel fused cuConv, any stride >= 1, optional fused
     bias+activation epilogue.
 
     Policy-free executor: VMEM-budget fallback and algorithm choice live
     in core.convspec.plan — calling this directly always runs the fused
-    kernel.
+    kernel.  ``tm``/``rows`` are its launch config (output-channel tile,
+    output rows per grid step; see kernels/cuconv_fused.py).
     """
     return _cf.cuconv_fused(x, w, bias, stride=_norm_stride(stride),
                             padding=tuple(padding), activation=activation,
+                            tm=tm, rows=rows,
                             interpret=_auto_interpret(interpret))
 
 

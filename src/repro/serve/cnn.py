@@ -86,20 +86,27 @@ class CnnServeEngine:
             self._fns[b] = fn
         return fn
 
-    def warmup(self, *, measure: bool = False) -> Dict[int, float]:
+    def warmup(self, *, measure: bool = False,
+               tune: Optional[str] = None) -> Dict[int, float]:
         """Resolve + compile every bucket program in one sweep.
 
-        ``measure=True`` first measure-autotunes each bucket's graph
-        (GraphPlan.warmup), so the compiled programs embed the measured
-        winners.  Returns per-bucket compile milliseconds.
+        ``tune="algo"`` first measure-autotunes each bucket's graph
+        (GraphPlan.warmup) and ``tune="full"`` also sweeps the winning
+        executors' candidate launch configs, so the compiled programs
+        embed the measured ``(algorithm, config)`` winners — a served
+        graph is tuned once here and replayed from cache ever after.
+        ``measure=True`` is the back-compat spelling of ``tune="algo"``.
+        Returns per-bucket compile milliseconds.
         """
+        if measure and tune is None:
+            tune = "algo"
         H, W, C = self.image_shape
         out = {}
         for b in self.buckets:
-            if measure and self.algorithm == "auto":
+            if tune is not None and self.algorithm == "auto":
                 self.model.graph_plan((b, H, W, C), backend=self.backend,
                                       precision=self.precision) \
-                    .warmup(measure=True)
+                    .warmup(tune=tune)
                 # the measured sweep may have swapped node plans: an
                 # already-compiled program would keep serving the stale
                 # trace, so force a rebuild
