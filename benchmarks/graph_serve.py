@@ -120,7 +120,34 @@ def run(quick=True):
             records.append({"name": f"graph/{m.name}_steady_b1_{dtype}",
                             "config": f"{m.name} b1 {HW}x{HW}x{C}",
                             "dtype": dtype, "us": us,
+                            "fused": dict(gp.fused),
                             "plans": _plan_record(gp)})
+
+        # fused vs unfused: the SAME tuned per-node configs, the fusion
+        # pass on vs off — the cross-layer fusion delta (DESIGN.md §10)
+        gpf = m.graph_plan((1, HW, HW, C))
+        gpu = m.graph_plan((1, HW, HW, C), fuse=False)
+        fnf = jax.jit(lambda pp, x, gp=gpf, m=m: m.apply(pp, x,
+                                                         graph_plan=gp))
+        fnu = jax.jit(lambda pp, x, gp=gpu, m=m: m.apply(pp, x,
+                                                         graph_plan=gp))
+        x = jnp.asarray(rng.normal(size=(1, HW, HW, C)), jnp.float32)
+        us_f = time_fn(fnf, p, x, repeats=3, warmup=1)
+        us_u = time_fn(fnu, p, x, repeats=3, warmup=1)
+        rows.append(csv_row(
+            f"graph/{m.name}_fusion_delta", us_f,
+            f"dtype=float32 unfused_us={us_u:.1f} "
+            f"speedup={us_u / max(us_f, 1e-9):.2f}x "
+            f"fused_nodes={len(gpf.fused)} "
+            f"ir_nodes={len(gpf.graph)}v{len(gpu.graph)}"))
+        records.append({"name": f"graph/{m.name}_fusion_delta",
+                        "config": f"{m.name} b1 {HW}x{HW}x{C}",
+                        "dtype": "float32",
+                        "us": us_f, "unfused_us": us_u,
+                        "speedup": us_u / max(us_f, 1e-9),
+                        "fused": dict(gpf.fused),
+                        "ir_nodes_fused": len(gpf.graph),
+                        "ir_nodes_unfused": len(gpu.graph)})
     path = write_json("graph_serve", records)
     rows.append(f"# wrote {path}")
     return rows

@@ -54,7 +54,8 @@ _STORE = JsonCache("autotune.json")
 
 #: observable measurement effort — tests assert the replay-from-cache
 #: path performs ZERO re-measurement against these counters
-MEASURE_STATS = {"algo_sweeps": 0, "config_sweeps": 0, "timed_calls": 0}
+MEASURE_STATS = {"algo_sweeps": 0, "config_sweeps": 0, "fusion_sweeps": 0,
+                 "timed_calls": 0}
 
 
 def reset_measure_stats() -> dict:
@@ -179,23 +180,36 @@ def default_candidates(spec: ConvSpec) -> Sequence[str]:
     return executors.supporting(spec)
 
 
-def _time_plan(p: ConvPlan, x, w, bias, repeats: int) -> float:
+def _time_plan(p, x, w, bias, repeats: int, addend=None) -> float:
     """Median wall time of a jitted plan execution (compiled, synced)."""
     fn = jax.jit(p)
-    fn(x, w, bias).block_until_ready()    # compile + warm
+    args = (x, w, bias) if addend is None else (x, w, bias, addend)
+    fn(*args).block_until_ready()    # compile + warm
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        fn(x, w, bias).block_until_ready()
+        fn(*args).block_until_ready()
         ts.append(time.perf_counter() - t0)
     MEASURE_STATS["timed_calls"] += 1 + repeats
     return float(np.median(ts))
 
 
+def _fused_operands(spec: ConvSpec):
+    """Synthesized (x, w, bias, addend) for timing a bare spec."""
+    dtype = jnp.dtype(spec.dtype)
+    x = jnp.zeros(spec.in_shape, dtype)
+    w = jnp.zeros(spec.filter_shape, dtype)
+    b = jnp.zeros((spec.filter_shape[3],), dtype) if spec.has_bias else None
+    a = (jnp.zeros(spec.out_shape, dtype)
+         if spec.fused_add != "none" else None)
+    return x, w, b, a
+
+
 def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
                       candidates: Optional[Sequence[str]] = None,
                       bias=None, activation: Optional[str] = None,
-                      groups: int = 1) -> str:
+                      groups: int = 1,
+                      spec: Optional[ConvSpec] = None) -> str:
     """Time every viable candidate (compiled, synced), persist the winner.
 
     The cuDNN-style exhaustive search the paper used for its baselines;
@@ -210,11 +224,17 @@ def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
     XLA ops elsewhere); the persisted key stays epilogue-insensitive
     (but dtype-distinct: ConvSpec.key() carries the dtype).  Each
     executor is timed under its model-chosen ``default_config`` (the
-    per-config sweep is ``measure_config``).
+    per-config sweep is ``measure_config``).  ``spec`` overrides the
+    operand-derived descriptor — the only way a *fused* spec (cross-
+    layer add/pool fields; they cannot be inferred from operands) is
+    swept as itself.
     """
     from repro.core import executors
-    spec = ConvSpec.for_conv(x, w, stride, padding, bias=bias,
-                             activation=activation, groups=groups)
+    if spec is None:
+        spec = ConvSpec.for_conv(x, w, stride, padding, bias=bias,
+                                 activation=activation, groups=groups)
+    addend = (jnp.zeros(spec.out_shape, jnp.dtype(spec.dtype))
+              if spec.fused_add != "none" else None)
     backend = jax.default_backend()
     hit = cached_best(spec, backend)
     # a persisted winner only short-circuits the sweep while it is still
@@ -239,7 +259,7 @@ def measure_algorithm(x, w, stride=1, padding="same", repeats=3,
             p = ConvPlan(spec, name, "candidate", "autotune timing",
                          backend,
                          config=executors.get(name).default_config(spec))
-            t = _time_plan(p, x, w, bias, repeats)
+            t = _time_plan(p, x, w, bias, repeats, addend)
         except Exception:
             continue
         if t < best_t:
@@ -257,7 +277,8 @@ def measure_config(x, w, stride=1, padding="same", repeats=3,
                    algorithm: Optional[str] = None,
                    candidates=None, bias=None,
                    activation: Optional[str] = None,
-                   groups: int = 1) -> Tuple[str, object]:
+                   groups: int = 1,
+                   spec: Optional[ConvSpec] = None) -> Tuple[str, object]:
     """Sweep an executor's candidate launch configs, persist the winner.
 
     ``algorithm=None`` tunes the spec's measured winner (else the
@@ -270,11 +291,16 @@ def measure_config(x, w, stride=1, padding="same", repeats=3,
     measurements.  An *explicit* ``candidates`` list is a request to
     measure exactly those configs: it is always timed (and its winner
     overwrites the persisted config).  Returns
-    ``(algorithm, LaunchConfig)``.
+    ``(algorithm, LaunchConfig)``.  ``spec`` overrides the operand-
+    derived descriptor (fused cross-layer specs; see
+    ``measure_algorithm``).
     """
     from repro.core import executors
-    spec = ConvSpec.for_conv(x, w, stride, padding, bias=bias,
-                             activation=activation, groups=groups)
+    if spec is None:
+        spec = ConvSpec.for_conv(x, w, stride, padding, bias=bias,
+                                 activation=activation, groups=groups)
+    addend = (jnp.zeros(spec.out_shape, jnp.dtype(spec.dtype))
+              if spec.fused_add != "none" else None)
     backend = jax.default_backend()
     if algorithm is None:
         algorithm = cached_best(spec, backend)
@@ -308,7 +334,7 @@ def measure_config(x, w, stride=1, padding="same", repeats=3,
                      "autotune config timing", backend, config=cfg,
                      config_source="candidate")
         try:
-            t = _time_plan(p, x, w, bias, repeats)
+            t = _time_plan(p, x, w, bias, repeats, addend)
         except Exception:
             continue
         if t < best_t:
@@ -317,6 +343,75 @@ def measure_config(x, w, stride=1, padding="same", repeats=3,
         return algorithm, ex.default_config(spec)
     record_config(spec, backend, algorithm, best)
     return algorithm, best
+
+
+def fusion_verdict(spec: ConvSpec, backend: Optional[str] = None
+                   ) -> Optional[bool]:
+    """Persisted fused-vs-unfused arbitration for a fused spec.
+
+    True: the fused kernel measured at least as fast as its unfused
+    decomposition; False: fusion measured slower (the graph pass keeps
+    the nodes separate); None: never measured (the pass fuses on the
+    cost model's word — fusion strictly removes HBM round trips).
+    """
+    e = _entry(spec, backend)
+    if e is None or not isinstance(e.get("fusion"), dict):
+        return None
+    return bool(e["fusion"].get("wins", True))
+
+
+def measure_fusion(spec: ConvSpec, backend: Optional[str] = None,
+                   repeats: int = 3, force: bool = False
+                   ) -> Optional[bool]:
+    """Time a fused spec against its unfused decomposition and persist
+    the verdict (``tune="full"`` arbitration, DESIGN.md §10).
+
+    The unfused side runs the SAME conv plan the pre-fusion graph would
+    have resolved, followed by the XLA add/ReLU or pool the consumed
+    node would have executed — an apples-to-apples per-layer race.  The
+    verdict persists under the fused spec's (fusion-distinct) cache key
+    as ``{"fusion": {"wins": bool, "fused_us": ..., "unfused_us": ...}}``
+    and replays free; ``force=True`` re-measures.  Returns the verdict,
+    or None when timing failed (nothing is persisted then).
+    """
+    from repro.core import convspec
+    from repro.kernels import ops
+    if not spec.has_fusion:
+        raise ValueError(f"spec {spec.key()} carries no fusion to measure")
+    backend = backend or jax.default_backend()
+    if not force:
+        hit = fusion_verdict(spec, backend)
+        if hit is not None:
+            return hit
+    MEASURE_STATS["fusion_sweeps"] += 1
+    x, w, b, addend = _fused_operands(spec)
+    fused_plan = convspec.plan(spec, backend=backend)
+    base_plan = convspec.plan(spec.unfused(), backend=backend)
+    if spec.fused_add != "none":
+        post_relu = spec.fused_add == "add_relu"
+
+        def unfused(x, w, bias=None, addend=None):
+            y = base_plan(x, w, bias) + addend
+            return jnp.maximum(y, 0) if post_relu else y
+    else:
+        kind, pkh, pkw, psh, psw, pph, ppw = spec.fused_pool
+
+        def unfused(x, w, bias=None):
+            return ops.pool2d(base_plan(x, w, bias), kind=kind,
+                              window=(pkh, pkw), stride=(psh, psw),
+                              padding=(pph, ppw))
+    try:
+        fused_t = _time_plan(fused_plan, x, w, b, repeats, addend)
+        unfused_t = _time_plan(unfused, x, w, b, repeats, addend)
+    except Exception:
+        return None              # nothing timed: leave the verdict open
+    wins = fused_t <= unfused_t
+    entry = _merged_entry(spec, backend)
+    entry["fusion"] = {"wins": wins,
+                       "fused_us": round(fused_t * 1e6, 3),
+                       "unfused_us": round(unfused_t * 1e6, 3)}
+    _STORE.put(_key(spec, backend), entry)
+    return wins
 
 
 def tune_spec(spec: ConvSpec, *, tune: str = "algo",
@@ -342,17 +437,18 @@ def tune_spec(spec: ConvSpec, *, tune: str = "algo",
         raise ValueError(
             f"measured tuning must run on the target backend: asked for "
             f"{backend!r} but this process runs {jax.default_backend()!r}")
-    dtype = jnp.dtype(spec.dtype)
-    x = jnp.zeros(spec.in_shape, dtype)
-    w = jnp.zeros(spec.filter_shape, dtype)
-    b = jnp.zeros((spec.filter_shape[3],), dtype) if spec.has_bias else None
+    x, w, b, _ = _fused_operands(spec)
     act = "relu" if spec.wants_relu else None
     kwargs = dict(stride=spec.stride, padding=spec.padding, repeats=repeats,
-                  bias=b, activation=act, groups=spec.groups)
+                  bias=b, activation=act, groups=spec.groups, spec=spec)
     if tune == "algo" or algorithm is None:
         best = measure_algorithm(x, w, **kwargs)
         if algorithm is None:
             algorithm = best
     if tune == "full":
+        if spec.has_fusion:
+            # fused-vs-unfused arbitration: the graph pass consults the
+            # persisted verdict on its next rewrite of this spec
+            measure_fusion(spec, backend=backend, repeats=repeats)
         return measure_config(x, w, algorithm=algorithm, **kwargs)
     return algorithm, None

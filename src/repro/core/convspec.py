@@ -99,9 +99,23 @@ def out_size(size: int, k: int, p: int, s: int) -> int:
 _norm_stride = normalize_stride
 
 
+# cross-layer fusions a ConvSpec can carry in its epilogue (DESIGN.md §10)
+FUSED_ADDS = ("none", "add", "add_relu")
+
+
 @dataclasses.dataclass(frozen=True)
 class ConvSpec:
-    """Descriptor of one convolution: the planner's (and caches') key."""
+    """Descriptor of one convolution: the planner's (and caches') key.
+
+    ``fused_add``/``fused_pool`` describe *cross-layer* epilogue fusions
+    the graph-level fusion pass (core/graph.py, DESIGN.md §10) folds
+    into a conv node: a residual-add second operand (with optional
+    post-add ReLU), or a trailing max/avg pool consuming the conv
+    output before it ever reaches HBM.  Both ride ``key()`` so every
+    cache — measured autotune, graph signatures — is fusion-distinct,
+    and both are *capability-negotiated*: executors refuse fused specs
+    whose fusions they do not declare (``Executor.fusions``).
+    """
     in_shape: Tuple[int, int, int, int]       # (N, H, W, C) NHWC
     filter_shape: Tuple[int, int, int, int]   # (KH, KW, C/groups, M) HWIO
     stride: Tuple[int, int] = (1, 1)          # (sh, sw)
@@ -109,10 +123,42 @@ class ConvSpec:
     dtype: str = "float32"
     epilogue: str = "none"                    # none | bias | relu | bias_relu
     groups: int = 1                           # feature groups (depthwise: C)
+    #: residual-add fusion: a second operand (shape == out_shape) added
+    #: after the bias, with 'add_relu' applying ReLU after the sum
+    fused_add: str = "none"                   # none | add | add_relu
+    #: pool fusion: (kind, kh, kw, sh, sw, ph, pw) applied to the conv
+    #: output (post-epilogue), or () for no pool
+    fused_pool: Tuple = ()
 
     def __post_init__(self):
         if self.epilogue not in EPILOGUES:
             raise ValueError(f"epilogue {self.epilogue!r} not in {EPILOGUES}")
+        if self.fused_add not in FUSED_ADDS:
+            raise ValueError(f"fused_add {self.fused_add!r} not in "
+                             f"{FUSED_ADDS}")
+        if self.fused_add != "none":
+            if self.wants_relu:
+                raise ValueError(
+                    f"fused_add {self.fused_add!r} needs epilogue 'none' or "
+                    f"'bias' (the activation moves AFTER the add); got "
+                    f"epilogue {self.epilogue!r}")
+            if self.fused_pool:
+                raise ValueError("a spec carries at most one cross-layer "
+                                 "fusion: fused_add and fused_pool are "
+                                 "mutually exclusive")
+        if self.fused_pool:
+            fp = tuple(self.fused_pool)
+            if len(fp) != 7 or fp[0] not in ("max", "avg"):
+                raise ValueError(
+                    f"fused_pool must be (kind, kh, kw, sh, sw, ph, pw) "
+                    f"with kind 'max'|'avg'; got {self.fused_pool!r}")
+            kind, pkh, pkw, psh, psw, pph, ppw = fp
+            if min(pkh, pkw, psh, psw) < 1 or min(pph, ppw) < 0:
+                raise ValueError(f"fused_pool geometry must be positive "
+                                 f"windows/strides and non-negative "
+                                 f"padding; got {self.fused_pool!r}")
+            object.__setattr__(self, "fused_pool",
+                               (str(kind),) + tuple(map(int, fp[1:])))
         if not isinstance(self.groups, int) or self.groups < 1:
             raise ValueError(f"groups must be a positive int; "
                              f"got {self.groups!r}")
@@ -185,6 +231,29 @@ class ConvSpec:
     def wants_relu(self) -> bool:
         return self.epilogue in ("relu", "bias_relu")
 
+    @property
+    def has_fusion(self) -> bool:
+        """Does this spec carry a cross-layer fusion (add or pool)?"""
+        return self.fused_add != "none" or bool(self.fused_pool)
+
+    @property
+    def final_shape(self) -> Tuple[int, int, int, int]:
+        """Shape this spec's execution ultimately yields: ``out_shape``
+        for plain/fused-add specs, the pooled shape for fused-pool."""
+        if not self.fused_pool:
+            return self.out_shape
+        _, pkh, pkw, psh, psw, pph, ppw = self.fused_pool
+        n, oh, ow, m = self.out_shape
+        return (n, out_size(oh, pkh, pph, psh),
+                out_size(ow, pkw, ppw, psw), m)
+
+    def unfused(self) -> "ConvSpec":
+        """This spec with cross-layer fusions stripped (the plain conv
+        the fusion pass started from; epilogue/bias are preserved)."""
+        if not self.has_fusion:
+            return self
+        return dataclasses.replace(self, fused_add="none", fused_pool=())
+
     def key(self) -> str:
         """Stable string key for persisted caches.
 
@@ -196,9 +265,15 @@ class ConvSpec:
         n, h, w, c = self.in_shape
         kh, kw, _, m = self.filter_shape
         g = f"-g{self.groups}" if self.groups != 1 else ""
+        fused = ""
+        if self.fused_add != "none":
+            fused = "-fadd" if self.fused_add == "add" else "-faddrelu"
+        elif self.fused_pool:
+            kind, pkh, pkw, psh, psw, pph, ppw = self.fused_pool
+            fused = (f"-fpool{kind}{pkh}x{pkw}s{psh}x{psw}p{pph}x{ppw}")
         return (f"n{n}h{h}w{w}c{c}-k{kh}x{kw}m{m}-s{self.stride[0]}x"
                 f"{self.stride[1]}-p{self.padding[0]}x{self.padding[1]}-"
-                f"{self.dtype}-{self.epilogue}{g}")
+                f"{self.dtype}-{self.epilogue}{g}{fused}")
 
 
 # ---------------------------------------------------------------------------
@@ -270,13 +345,19 @@ class ConvPlan:
                 f"accum={ex.accum} {self.reason}")
 
     # -- execution -------------------------------------------------------
-    def __call__(self, x, w, bias=None):
+    def __call__(self, x, w, bias=None, addend=None):
         spec = self.spec
         if spec.has_bias and bias is None:
             raise ValueError(f"plan epilogue {spec.epilogue!r} needs a bias")
+        if spec.fused_add != "none" and addend is None:
+            raise ValueError(f"plan for fused-add spec {spec.key()} needs "
+                             f"an addend (the residual operand)")
+        if spec.fused_add == "none" and addend is not None:
+            raise ValueError(f"plan for spec {spec.key()} does not take an "
+                             f"addend (fused_add='none')")
         return self.executor.execute(
             spec, x, w, bias=bias if spec.has_bias else None,
-            interpret=self.interpret, config=self.config)
+            addend=addend, interpret=self.interpret, config=self.config)
 
 
 def resolve_config(spec: ConvSpec, algorithm: str,

@@ -137,18 +137,23 @@ def _dedup_configs(dicts: Iterable[Dict[str, int]]
 
 
 @functools.lru_cache(maxsize=None)
-def _accepts_config(fn) -> bool:
-    """Does ``fn`` (an executor method) take a ``config`` kwarg?
-    Pre-config third-party overrides — 5-argument ``_execute``,
-    ``vmem_bytes(self, spec)`` — keep their old signatures and are
-    called without one."""
+def _accepts_kwarg(fn, name: str) -> bool:
+    """Does ``fn`` (an executor method) take a ``name`` kwarg?
+    Pre-config/pre-fusion third-party overrides — 5-argument
+    ``_execute``, ``vmem_bytes(self, spec)`` — keep their old
+    signatures and are called without the newer kwargs."""
     try:
         params = inspect.signature(fn).parameters
     except (TypeError, ValueError):            # builtins/C callables
         return False
-    return ("config" in params
+    return (name in params
             or any(p.kind is inspect.Parameter.VAR_KEYWORD
                    for p in params.values()))
+
+
+def _accepts_config(fn) -> bool:
+    """Back-compat alias for ``_accepts_kwarg(fn, "config")``."""
+    return _accepts_kwarg(fn, "config")
 
 
 class Executor:
@@ -194,10 +199,34 @@ class Executor:
         if spec.groups != 1 and not self.supports_groups:
             return False, (f"no grouped-conv support (groups={spec.groups}); "
                            f"lax feature_group_count is the executor")
+        fusable = self.fusions(spec)
+        if spec.fused_add != "none" and "add" not in fusable:
+            return False, (f"{self.name} does not fuse a residual add "
+                           f"(declared fusions for this spec: "
+                           f"{list(fusable) or 'none'})")
+        if spec.fused_pool and "pool" not in fusable:
+            return False, (f"{self.name} does not fuse pool "
+                           f"{spec.fused_pool!r} (declared fusions for "
+                           f"this spec: {list(fusable) or 'none'})")
         return self._supports(spec)
 
     def _supports(self, spec) -> Tuple[bool, str]:
         return True, "generic algorithm"
+
+    def fusions(self, spec) -> Tuple[str, ...]:
+        """Cross-layer fusions ("add", "pool") this executor can absorb
+        for ``spec``'s geometry (DESIGN.md §10).
+
+        Non-fusing executors take every fusion for free: ``execute``
+        applies the residual add / pool as XLA ops after the bare conv,
+        exactly as the unfused graph would have — so folding nodes into
+        their specs is always numerically safe.  In-kernel
+        (``fuses_epilogue``) executors must opt in per fusion kind and
+        handle the operands inside ``_execute``.
+        """
+        if self.fuses_epilogue:
+            return ()
+        return ("add", "pool")
 
     # -- tuning space (DESIGN.md §9) -------------------------------------
     def configs(self, spec) -> Tuple[LaunchConfig, ...]:
@@ -303,32 +332,54 @@ class Executor:
         return "lax", "library conv covers all geometries"
 
     # -- execution -------------------------------------------------------
-    def execute(self, spec, x, w, bias=None, interpret=None, config=None):
-        """Run ``spec`` on ``(x, w, bias)``, epilogue included.
+    def execute(self, spec, x, w, bias=None, addend=None, interpret=None,
+                config=None):
+        """Run ``spec`` on ``(x, w, bias[, addend])``, epilogue included.
 
         Operands are cast to the spec dtype first (under a bf16
         precision policy the master weights stay fp32); the contraction
         accumulates per ``accum``.  Non-fusing executors apply the
-        bias/ReLU epilogue as XLA ops after the bare conv.  ``config``
-        is the plan's resolved launch config; executors whose
-        ``_execute`` predates the config era (5-argument third-party
-        subclasses) are called without it.
+        bias/ReLU epilogue — and any cross-layer fusion the spec
+        carries (residual ``addend``, trailing pool) — as XLA ops after
+        the bare conv; ``fuses_epilogue`` executors absorb everything
+        in-kernel.  ``config`` is the plan's resolved launch config;
+        executors whose ``_execute`` predates the config/fusion era
+        (5-argument third-party subclasses) are called without the
+        newer kwargs.
         """
         dtype = jnp.dtype(spec.dtype)
         x = x if x.dtype == dtype else x.astype(dtype)
         w = w if w.dtype == dtype else w.astype(dtype)
         if bias is not None and bias.dtype != dtype:
             bias = bias.astype(dtype)
-        if _accepts_config(type(self)._execute):
-            y = self._execute(spec, x, w, bias, interpret,
-                              config=LaunchConfig.of(config))
-        else:
-            y = self._execute(spec, x, w, bias, interpret)
+        if spec.fused_add != "none" and addend is None:
+            raise ValueError(f"fused-add spec {spec.key()} needs an addend")
+        if addend is not None and addend.dtype != dtype:
+            addend = addend.astype(dtype)
+        kwargs = {}
+        if _accepts_kwarg(type(self)._execute, "config"):
+            kwargs["config"] = LaunchConfig.of(config)
+        if addend is not None and self.fuses_epilogue:
+            if not _accepts_kwarg(type(self)._execute, "addend"):
+                raise TypeError(
+                    f"executor {self.name!r} declares the 'add' fusion but "
+                    f"its _execute takes no addend kwarg")
+            kwargs["addend"] = addend
+        y = self._execute(spec, x, w, bias, interpret, **kwargs)
         if not self.fuses_epilogue:
             if spec.has_bias:
                 y = y + bias
-            if spec.wants_relu:
+            if spec.fused_add != "none":
+                y = y + addend
+                if spec.fused_add == "add_relu":
+                    y = jnp.maximum(y, 0)
+            elif spec.wants_relu:
                 y = jnp.maximum(y, 0)
+            if spec.fused_pool:
+                from repro.kernels import ops
+                kind, pkh, pkw, psh, psw, pph, ppw = spec.fused_pool
+                y = ops.pool2d(y, kind=kind, window=(pkh, pkw),
+                               stride=(psh, psw), padding=(pph, ppw))
         return y
 
     def _execute(self, spec, x, w, bias, interpret):
@@ -736,6 +787,25 @@ class FusedPallasExecutor(Executor):
     takes_interpret = True
     tunable = ("tm", "rows")
 
+    @staticmethod
+    def _pool3(spec):
+        """``(kind, psh, psw)`` kernel-pool tuple for a fused-pool spec."""
+        kind, _, _, psh, psw, _, _ = spec.fused_pool
+        return (kind, psh, psw)
+
+    def fusions(self, spec):
+        """In-kernel fusions: any residual add; non-overlapping unpadded
+        pools whose geometry the multi-row blocking can cover (window ==
+        stride, OH/OW divisible by the pool stride)."""
+        out = ("add",)
+        if spec.fused_pool:
+            kind, pkh, pkw, psh, psw, pph, ppw = spec.fused_pool
+            _, oh, ow, _ = spec.out_shape
+            if ((pkh, pkw) == (psh, psw) and (pph, ppw) == (0, 0)
+                    and oh % psh == 0 and ow % psw == 0):
+                out = out + ("pool",)
+        return out
+
     def vmem_bytes(self, spec, config=None):
         from repro.kernels.cuconv_fused import vmem_bytes
         cfg = LaunchConfig.of(config)
@@ -743,7 +813,10 @@ class FusedPallasExecutor(Executor):
         return vmem_bytes(spec.in_shape, spec.filter_shape,
                           tm=cfg.get("tm", 128), rows=cfg.get("rows", 1),
                           pad=spec.padding, stride=spec.stride,
-                          itemsize=itemsize)
+                          itemsize=itemsize,
+                          addend=spec.fused_add != "none",
+                          pool=(self._pool3(spec) if spec.fused_pool
+                                else None))
 
     def _supports(self, spec):
         need = self.vmem_bytes(spec)
@@ -751,14 +824,26 @@ class FusedPallasExecutor(Executor):
             return False, (f"fused working set {need / 2**20:.1f} MB "
                            f"> {FUSED_VMEM_BUDGET / 2**20:.0f} MB "
                            f"VMEM budget")
+        if spec.fused_pool and not any(
+                self.config_supports(spec, c)[0] for c in self.configs(spec)):
+            return False, ("no feasible multi-row blocking covers fused "
+                           f"pool {spec.fused_pool!r}")
         return True, "fused Pallas kernel fits VMEM"
 
     def configs(self, spec):
         _, oh, _, m = spec.out_shape
+        if spec.fused_pool:
+            # rows must tile both the pool stride and OH (candidate 0:
+            # one pool window of output rows per grid step)
+            psh = spec.fused_pool[3]
+            rows_cands = tuple(r for r in (psh, 2 * psh, 4 * psh, 8 * psh)
+                               if r <= oh) or (psh,)
+        else:
+            rows_cands = (1, 2, 4, 8)
         return _dedup_configs(
             {"tm": min(tm, m), "rows": min(rows, oh)}
             for tm in (128, 256, 512)          # candidate 0: tm=128, rows=1
-            for rows in (1, 2, 4, 8))
+            for rows in rows_cands)
 
     def _config_supports(self, spec, config):
         rows = config.get("rows", 1)
@@ -771,6 +856,18 @@ class FusedPallasExecutor(Executor):
         if rows > 1 and kh - 1 > rows * sh:
             return False, (f"multi-row blocking needs KH-1 <= rows*sh; "
                            f"got KH={kh}, rows={rows}, sh={sh}")
+        if spec.fused_pool:
+            psh = spec.fused_pool[3]
+            if rows % psh:
+                return False, (f"fused pool needs rows % pool stride == 0; "
+                               f"got rows={rows}, psh={psh}")
+            if oh % rows:
+                return False, (f"fused pool needs OH % rows == 0; "
+                               f"got OH={oh}, rows={rows}")
+            if kh - 1 > rows * sh:
+                return False, (f"fused pool rides the multi-row kernel: "
+                               f"needs KH-1 <= rows*sh; got KH={kh}, "
+                               f"rows={rows}, sh={sh}")
         return True, "config geometry ok"
 
     def config_cost(self, spec, config):
@@ -783,6 +880,10 @@ class FusedPallasExecutor(Executor):
     def heuristic_claim(self, spec, backend):
         if backend != "tpu":
             return None                    # interpret mode elsewhere
+        if spec.has_fusion:
+            # outranks every per-layer claim: the folded add/pool stays
+            # resident in VMEM instead of round-tripping HBM
+            return 85, "cross-layer fusion resident in VMEM"
         if not spec.unit_stride:
             return 80, "strided conv: fused kernel on TPU"
         if spec.is_1x1:
@@ -799,15 +900,23 @@ class FusedPallasExecutor(Executor):
                     "two-stage kernels bound the VMEM working set")
         return "cuconv", "fused-tap XLA path handles any stride"
 
-    def _execute(self, spec, x, w, bias, interpret, config=None):
+    def _execute(self, spec, x, w, bias, interpret, config=None,
+                 addend=None):
         # epilogue fused into the kernel: the accumulator takes
-        # bias+activation in VMEM before its single HBM write
+        # bias + residual addend + activation (or the fused pool) in
+        # VMEM before its single HBM write
         from repro.kernels import ops
         cfg = LaunchConfig.of(config)
+        if spec.fused_add != "none":
+            relu = spec.fused_add == "add_relu"    # post-add activation
+        else:
+            relu = spec.wants_relu
         return ops.cuconv_fused(
             x, w, spec.padding, stride=spec.stride,
             bias=bias if spec.has_bias else None,
-            activation="relu" if spec.wants_relu else None,
+            activation="relu" if relu else None,
+            addend=addend,
+            pool=self._pool3(spec) if spec.fused_pool else None,
             tm=cfg.get("tm", 128), rows=cfg.get("rows", 1),
             interpret=interpret)
 

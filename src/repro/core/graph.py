@@ -162,7 +162,13 @@ class OpSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ConvOp(OpSpec):
-    """A planned convolution node (the only node kind plan() resolves)."""
+    """A planned convolution node (the only node kind plan() resolves).
+
+    A spec carrying a cross-layer ``fused_add`` (the fusion pass's
+    residual fold) takes a SECOND input edge — the shortcut operand,
+    shape-checked against the conv's output shape; a ``fused_pool``
+    spec keeps one input but yields the pooled ``final_shape``.
+    """
     spec: ConvSpec = None
 
     op = "conv"
@@ -171,17 +177,26 @@ class ConvOp(OpSpec):
         super().__post_init__()
         if not isinstance(self.spec, ConvSpec):
             raise ValueError(f"conv node {self.name!r} needs a ConvSpec")
-        if len(self.inputs) != 1:
-            raise ValueError(f"conv node {self.name!r} takes exactly one "
-                             f"input; got {self.inputs}")
+        want = 2 if self.spec.fused_add != "none" else 1
+        if len(self.inputs) != want:
+            raise ValueError(
+                f"conv node {self.name!r} takes exactly {want} input(s) "
+                f"(fused_add={self.spec.fused_add!r}); got {self.inputs}")
 
     def infer_shape(self, in_shapes):
-        (s,) = in_shapes
+        s = in_shapes[0]
         if tuple(s) != self.spec.in_shape:
             raise ValueError(f"conv node {self.name!r} expects input shape "
                              f"{self.spec.in_shape} but edge "
                              f"{self.inputs[0]!r} produces {tuple(s)}")
-        return self.spec.out_shape
+        if self.spec.fused_add != "none":
+            a = tuple(in_shapes[1])
+            if a != self.spec.out_shape:
+                raise ValueError(
+                    f"conv node {self.name!r}: fused-add operand "
+                    f"{self.inputs[1]!r} has shape {a} but the conv "
+                    f"produces {self.spec.out_shape}")
+        return self.spec.final_shape
 
     def descriptor(self):
         return f"{super().descriptor()}:{self.spec.key()}"
@@ -565,6 +580,130 @@ def _as_ir(graph: GraphLike) -> Graph:
 
 
 # ---------------------------------------------------------------------------
+# cross-layer fusion pass (DESIGN.md §10)
+
+def fuse_graph(graph: Graph, backend: Optional[str] = None
+               ) -> Tuple[Graph, Dict[str, str]]:
+    """Planning-time IR rewrite: fold fusable consumers into conv nodes.
+
+    Two rewrite rules, applied to fixpoint:
+
+      add   An ``AddOp`` over two edges where one producer is a conv
+            with no other consumer, no existing fusion, and epilogue
+            ``none``/``bias`` folds into that conv (latest such producer
+            in topological order wins).  The conv absorbs the add's
+            activation (``fused_add="add"|"add_relu"``), gains the OTHER
+            edge as a second input (the shortcut operand), and moves to
+            the add's slot — so a ``resnet_like`` shortcut join executes
+            inside the conv kernel's epilogue.
+      pool  A ``PoolOp`` whose single-consumer conv producer has no
+            existing fusion folds into the conv as ``fused_pool``; the
+            conv output tile stays in VMEM and is pooled before the
+            single writeback.
+
+    Each rewrite is capability-negotiated: it only fires when at least
+    one registered executor ``supports()`` the fused spec (executors
+    declare fusable forms via ``fusions()``) AND a persisted
+    ``tune="full"`` measurement has not ruled the fusion a loss
+    (``autotune.fusion_verdict``; unmeasured specs fuse optimistically).
+    No ``plan()`` resolution happens here — the pass is pure rewriting,
+    so the persisted-cache hit path stays zero-resolution.
+
+    Returns ``(fused_graph, provenance)`` where provenance maps each
+    fused conv node name to ``"add:<consumed>"`` / ``"pool:<consumed>"``.
+    The original graph object is returned unchanged when nothing fuses.
+    """
+    from repro.core import autotune, executors
+    backend = backend or jax.default_backend()
+    nodes: List[OpSpec] = list(graph.nodes)
+    output = graph.output
+    fused: Dict[str, str] = {}
+
+    def _rename(ns: List[OpSpec], old: str, new: str) -> List[OpSpec]:
+        out = []
+        for n in ns:
+            if old in n.inputs:
+                n = dataclasses.replace(n, inputs=tuple(
+                    new if e == old else e for e in n.inputs))
+            out.append(n)
+        return out
+
+    progress = True
+    while progress:
+        progress = False
+        counts: Dict[str, int] = {}
+        for n in nodes:
+            for e in n.inputs:
+                counts[e] = counts.get(e, 0) + 1
+        counts[output] = counts.get(output, 0) + 1   # graph output consumes
+        index = {n.name: i for i, n in enumerate(nodes)}
+        for i, node in enumerate(nodes):
+            if isinstance(node, AddOp) and len(node.inputs) == 2:
+                best = None
+                for pos, e in enumerate(node.inputs):
+                    j = index.get(e)
+                    if j is None:                    # the graph input
+                        continue
+                    prod = nodes[j]
+                    if (not isinstance(prod, ConvOp)
+                            or counts.get(e, 0) != 1
+                            or prod.spec.has_fusion
+                            or prod.spec.epilogue not in ("none", "bias")):
+                        continue
+                    if best is None or j > best[0]:
+                        best = (j, pos)
+                if best is None:
+                    continue
+                j, pos = best
+                conv = nodes[j]
+                mode = "add_relu" if node.activation == "relu" else "add"
+                spec = dataclasses.replace(conv.spec, fused_add=mode)
+                new_inputs = (conv.inputs[0], node.inputs[1 - pos])
+                kind = "add"
+            elif isinstance(node, PoolOp):
+                j = index.get(node.inputs[0])
+                if j is None:
+                    continue
+                conv = nodes[j]
+                if (not isinstance(conv, ConvOp)
+                        or counts.get(node.inputs[0], 0) != 1
+                        or conv.spec.has_fusion):
+                    continue
+                spec = dataclasses.replace(
+                    conv.spec,
+                    fused_pool=(node.kind,
+                                node.window[0], node.window[1],
+                                node.stride[0], node.stride[1],
+                                node.padding[0], node.padding[1]))
+                new_inputs = conv.inputs
+                kind = "pool"
+            else:
+                continue
+            # capability + measured arbitration gates: some executor
+            # must support the fused form, and a persisted tune="full"
+            # measurement saying the fusion LOSES keeps it unfused
+            if not executors.supporting(spec):
+                continue
+            if autotune.fusion_verdict(spec, backend) is False:
+                continue
+            fused[conv.name] = f"{kind}:{node.name}"
+            # the conv moves into the consumed node's slot (all of its
+            # inputs are defined there, and nothing between consumed it)
+            nodes[i] = ConvOp(conv.name, new_inputs, spec)
+            del nodes[j]
+            if output == node.name:
+                output = conv.name
+            nodes = _rename(nodes, node.name, conv.name)
+            progress = True
+            break
+
+    if not fused:
+        return graph, {}
+    return Graph(tuple(nodes), graph.in_shape, graph.input_name,
+                 output), fused
+
+
+# ---------------------------------------------------------------------------
 # the planned program
 
 @dataclasses.dataclass
@@ -581,6 +720,13 @@ class GraphPlan:
     conv_plans: Dict[str, ConvPlan]
     backend: str
     source: str                  # resolved | graph_cache | forced
+    # fusion provenance: {conv node: "add:<consumed>" | "pool:<consumed>"}
+    fused: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # the pre-fusion IR (None when the pass was disabled): the persisted
+    # cache key stays the UNFUSED signature, and tune="full" re-runs the
+    # pass from here so measured fused-vs-unfused verdicts can flip a
+    # rewrite on or off
+    base_graph: Optional[Graph] = None
     # per-conv-node jitted executables, shared by warmup() and run() so
     # the warmup compile sweep is the same program inference reuses
     _jitted: Dict[str, Callable] = dataclasses.field(
@@ -613,10 +759,15 @@ class GraphPlan:
                 grp = f" g{s.groups}" if s.groups != 1 else ""
                 cfg = (f" cfg[{p.config_source}]={p.config.key()}"
                        if p.config else "")
+                fz = ""
+                prov = self.fused.get(node.name)
+                if prov:
+                    kind, _, consumed = prov.partition(":")
+                    fz = f" fused[{kind}]={consumed}"
                 lines.append(
                     f"  {node.name:>8s}  {h:>3d}x{w:<3d} c{c:<4d} {kh}x{kw}/"
                     f"{s.stride[0]}{grp} m{m:<4d} {s.dtype:>9s} -> "
-                    f"{p.algorithm:24s} [{p.source}]{cfg} {p.reason}")
+                    f"{p.algorithm:24s} [{p.source}]{cfg}{fz} {p.reason}")
             else:
                 out = self.graph.shapes[node.name]
                 lines.append(f"  {node.name:>8s}  {node.descriptor():50s} "
@@ -671,8 +822,9 @@ class GraphPlan:
             ins = [values[e] for e in node.inputs]
             if isinstance(node, ConvOp):
                 p = self._node_params(params, node, node.spec.has_bias)
+                a = ins[1] if node.spec.fused_add != "none" else None
                 y = self._node_fn(node.name)(
-                    ins[0], p["w"], p["b"] if node.spec.has_bias else None)
+                    ins[0], p["w"], p["b"] if node.spec.has_bias else None, a)
             elif isinstance(node, PoolOp):
                 y = ops.pool2d(ins[0], node.kind, node.window,
                                node.stride, node.padding)
@@ -720,17 +872,31 @@ class GraphPlan:
             tune = "algo"
         t_start = time.perf_counter()
         if tune is not None:
-            new_plans: Dict[str, ConvPlan] = {}
             # tune-mode and backend-mismatch validation live in
             # tune_spec (one home), which raises before any node is
             # measured
             for node in self.graph.conv_nodes:
                 autotune.tune_spec(node.spec, tune=tune,
                                    backend=self.backend, repeats=repeats)
-                new_plans[node.name] = plan(node.spec, backend=self.backend)
-            self.conv_plans = new_plans
+            if tune == "full" and self.base_graph is not None:
+                # tune="full" measured each fused spec against its
+                # unfused decomposition (autotune.measure_fusion); re-run
+                # the pass from the pre-fusion IR so losing rewrites are
+                # dropped — and previously vetoed ones re-admitted
+                refused, fmap = fuse_graph(self.base_graph, self.backend)
+                if refused.signature() != self.graph.signature():
+                    old = {n.name: n.spec for n in self.graph.conv_nodes}
+                    self.graph, self.fused = refused, fmap
+                    for node in self.graph.conv_nodes:
+                        if old.get(node.name) != node.spec:
+                            autotune.tune_spec(node.spec, tune=tune,
+                                               backend=self.backend,
+                                               repeats=repeats)
+            self.conv_plans = {n.name: plan(n.spec, backend=self.backend)
+                               for n in self.graph.conv_nodes}
             self._jitted.clear()        # stale traces must not serve on
-            _persist(self.graph, self.backend, self.conv_plans)
+            _persist(self.base_graph or self.graph, self.backend,
+                     self.conv_plans, alias=self.graph)
         rows = []
         for node in self.graph.conv_nodes:
             p = self.conv_plans[node.name]
@@ -739,8 +905,10 @@ class GraphPlan:
             x = jnp.zeros(s.in_shape, dtype)
             w = jnp.zeros(s.filter_shape, dtype)
             b = jnp.zeros((s.filter_shape[3],), dtype) if s.has_bias else None
+            a = (jnp.zeros(s.out_shape, dtype)
+                 if s.fused_add != "none" else None)
             t0 = time.perf_counter()
-            self._node_fn(node.name)(x, w, b).block_until_ready()
+            self._node_fn(node.name)(x, w, b, a).block_until_ready()
             rows.append({"node": node.name, "key": s.key(),
                          "algorithm": p.algorithm, "source": p.source,
                          "config": (p.config.as_dict() if p.config else {}),
@@ -755,50 +923,72 @@ class GraphPlan:
 
 def plan_graph(graph: GraphLike, *, backend: Optional[str] = None,
                force: Optional[str] = None,
-               use_cache: bool = True) -> GraphPlan:
+               use_cache: bool = True, fuse: bool = True) -> GraphPlan:
     """Resolve a whole-network plan once.
 
     Accepts the IR (``Graph``) or the compatibility chain
-    (``ConvGraph``, lowered via ``to_ir``).  Forced plans bypass the
+    (``ConvGraph``, lowered via ``to_ir``).  The cross-layer fusion
+    pass (``fuse_graph``) rewrites the IR first — ``fuse=False`` is the
+    escape hatch serving the unfused program.  Forced plans bypass the
     persisted cache in both directions (they are a debugging/benchmark
     tool, not a deployment choice).  Otherwise a persisted entry keyed
-    by backend + graph signature reconstructs the program with zero
-    per-node plan() resolutions; entries that are unversioned, carry a
-    foreign schema, or name unknown / no-longer-supported algorithms
-    are dropped and re-resolved.
+    by backend + the PRE-fusion graph signature (so callers address the
+    cache by the graph they wrote, not the pass's output) reconstructs
+    the program with zero per-node plan() resolutions; entries that are
+    unversioned, carry a foreign schema, or name unknown /
+    no-longer-supported algorithms are dropped and re-resolved.
     """
     ir = _as_ir(graph)
     backend = backend or jax.default_backend()
+    fmap: Dict[str, str] = {}
+    base = ir if fuse else None
+    prog = ir
+    if fuse:
+        prog, fmap = fuse_graph(ir, backend)
     if force is not None:
         plans = {n.name: plan(n.spec, force=force, backend=backend)
-                 for n in ir.conv_nodes}
-        return GraphPlan(ir, plans, backend, "forced")
+                 for n in prog.conv_nodes}
+        return GraphPlan(prog, plans, backend, "forced",
+                         fused=fmap, base_graph=base)
     if use_cache:
-        cached = _plans_from_cache(ir, backend)
+        cached = _plans_from_cache(prog, backend, key_graph=ir)
         if cached is not None:
-            return GraphPlan(ir, cached, backend, "graph_cache")
-    plans = {n.name: plan(n.spec, backend=backend) for n in ir.conv_nodes}
+            return GraphPlan(prog, cached, backend, "graph_cache",
+                             fused=fmap, base_graph=base)
+    plans = {n.name: plan(n.spec, backend=backend) for n in prog.conv_nodes}
     if use_cache:       # use_cache=False means no cache interaction AT ALL
-        _persist(ir, backend, plans)
-    return GraphPlan(ir, plans, backend, "resolved")
+        _persist(ir, backend, plans, alias=prog)
+    return GraphPlan(prog, plans, backend, "resolved",
+                     fused=fmap, base_graph=base)
 
 
 def _graph_key(graph: GraphLike, backend: str) -> str:
     return f"{backend}/{graph.signature()}"
 
 
-def _persist(graph: Graph, backend: str,
-             plans: Mapping[str, ConvPlan]) -> None:
-    _STORE.put(_graph_key(graph, backend),
-               {"schema": GRAPH_SCHEMA,
-                "algorithms": {name: p.algorithm
-                               for name, p in plans.items()}})
+def _persist(graph: Graph, backend: str, plans: Mapping[str, ConvPlan],
+             alias: Optional[Graph] = None) -> None:
+    # ``graph`` is the addressing identity (the pre-fusion IR); when the
+    # fusion pass rewrote it, ``alias`` is the fused program, which gets
+    # the same entry under its own signature so callers holding either
+    # graph can find it (reads go through the pre-fusion key)
+    entry = {"schema": GRAPH_SCHEMA,
+             "algorithms": {name: p.algorithm
+                            for name, p in plans.items()}}
+    _STORE.put(_graph_key(graph, backend), entry)
+    if alias is not None and alias.signature() != graph.signature():
+        _STORE.put(_graph_key(alias, backend), entry)
 
 
-def _plans_from_cache(graph: Graph,
-                      backend: str) -> Optional[Dict[str, ConvPlan]]:
+def _plans_from_cache(graph: Graph, backend: str,
+                      key_graph: Optional[Graph] = None
+                      ) -> Optional[Dict[str, ConvPlan]]:
+    # ``graph`` is the (possibly fused) program whose conv specs the
+    # entry must satisfy; ``key_graph`` is the pre-fusion IR the entry
+    # is addressed by (fusion keeps conv node NAMES stable, so one entry
+    # serves both the fused and unfused program of the same source IR)
     from repro.core import autotune, executors
-    entry = _STORE.get(_graph_key(graph, backend))
+    entry = _STORE.get(_graph_key(key_graph or graph, backend))
     if not isinstance(entry, dict):
         return None
     if entry.get("schema") != GRAPH_SCHEMA:

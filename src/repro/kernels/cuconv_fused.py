@@ -41,6 +41,22 @@ executor prunes the rest.
 Epilogue (DESIGN.md §4): on the final tap the still-VMEM-resident
 accumulator takes bias add + activation before the single HBM write —
 ``relu(conv(x, w) + b)`` costs no extra HBM round trip.
+
+Cross-layer fusion (DESIGN.md §10) extends the same epilogue slot:
+
+``addend`` — a residual second operand (shape == the conv output) whose
+block rides the output's index_map, added after the bias and before the
+activation, so a ResNet shortcut join (``relu(conv(x) + b + shortcut)``)
+also costs no extra HBM round trip.
+
+``pool`` — a trailing non-overlapping max/avg pool ``(kind, psh, psw)``
+(window == stride, no padding) folded into the multi-row path: the conv
+partials accumulate in an f32 VMEM *scratch* block of ``rows`` output
+rows; on the final tap the epilogue runs and the block is pooled with
+static strided slices (no gather) down to ``(rows/psh, OW/psw)`` before
+the single — now pool-sized — HBM write.  Validity (``config_supports``
+on the executor enforces it): ``rows % psh == 0``, ``OH % rows == 0``,
+``OW % psw == 0`` and the multi-row halo rule ``KH - 1 <= rows*sh``.
 """
 from __future__ import annotations
 
@@ -49,17 +65,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import _compat
 
 
 def _make_kernel(kw: int, ow: int, sw: int, taps: int, activation,
-                 has_bias: bool):
+                 has_bias: bool, has_add: bool = False):
     def _kernel(*refs):
-        if has_bias:
-            x_ref, w_ref, b_ref, o_ref = refs
-        else:
-            x_ref, w_ref, o_ref = refs
+        refs = list(refs)
+        x_ref, w_ref = refs.pop(0), refs.pop(0)
+        b_ref = refs.pop(0) if has_bias else None
+        a_ref = refs.pop(0) if has_add else None
+        o_ref = refs.pop(0)
         t = pl.program_id(3)
         dj = jax.lax.rem(t, kw)
         row = x_ref[0, 0]                                   # (Wp', C)
@@ -83,12 +101,14 @@ def _make_kernel(kw: int, ow: int, sw: int, taps: int, activation,
         def _acc():
             o_ref[0, 0] += part
 
-        if has_bias or activation is not None:
+        if has_bias or has_add or activation is not None:
             @pl.when(t == taps - 1)
             def _epilogue():
                 acc = o_ref[0, 0]
                 if has_bias:
                     acc = acc + b_ref[0].astype(jnp.float32)
+                if has_add:
+                    acc = acc + a_ref[0, 0].astype(jnp.float32)
                 if activation == "relu":
                     acc = jnp.maximum(acc, 0.0)
                 o_ref[0, 0] = acc
@@ -96,13 +116,34 @@ def _make_kernel(kw: int, ow: int, sw: int, taps: int, activation,
     return _kernel
 
 
+def _pool_block(acc, kind: str, psh: int, psw: int):
+    """Non-overlapping (window == stride) pool of a (rows, OW, TM) VMEM
+    block via static strided slices — no gather, TPU-legal."""
+    pooled = None
+    for i in range(psh):
+        for j in range(psw):
+            piece = acc[i::psh, j::psw, :]
+            if pooled is None:
+                pooled = piece
+            elif kind == "max":
+                pooled = jnp.maximum(pooled, piece)
+            else:
+                pooled = pooled + piece
+    if kind == "avg":
+        pooled = pooled / (psh * psw)
+    return pooled
+
+
 def _make_multirow_kernel(kw: int, ow: int, sh: int, sw: int, rows: int,
-                          taps: int, activation, has_bias: bool):
+                          taps: int, activation, has_bias: bool,
+                          has_add: bool = False, pool=None):
     def _kernel(*refs):
-        if has_bias:
-            xa_ref, xb_ref, w_ref, b_ref, o_ref = refs
-        else:
-            xa_ref, xb_ref, w_ref, o_ref = refs
+        refs = list(refs)
+        xa_ref, xb_ref, w_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+        b_ref = refs.pop(0) if has_bias else None
+        a_ref = refs.pop(0) if has_add else None
+        o_ref = refs.pop(0)
+        acc_ref = refs.pop(0) if pool is not None else None
         t = pl.program_id(3)
         di = t // kw
         dj = jax.lax.rem(t, kw)
@@ -122,6 +163,30 @@ def _make_multirow_kernel(kw: int, ow: int, sh: int, sw: int, rows: int,
                        preferred_element_type=jnp.float32)  # (rows*OW, TM)
         part = part.reshape(rows, ow, part.shape[-1])
 
+        if pool is not None:
+            # conv partials accumulate in the f32 VMEM scratch; the
+            # output block only ever sees the pooled final tap
+            kind, psh, psw = pool
+
+            @pl.when(t == 0)
+            def _init():
+                acc_ref[...] = part
+
+            @pl.when(t > 0)
+            def _acc():
+                acc_ref[...] += part
+
+            @pl.when(t == taps - 1)
+            def _epilogue():
+                acc = acc_ref[...]
+                if has_bias:
+                    acc = acc + b_ref[0].astype(jnp.float32)
+                if activation == "relu":
+                    acc = jnp.maximum(acc, 0.0)
+                o_ref[0] = _pool_block(acc, kind, psh, psw)
+
+            return
+
         @pl.when(t == 0)
         def _init():
             o_ref[0] = part
@@ -130,12 +195,14 @@ def _make_multirow_kernel(kw: int, ow: int, sh: int, sw: int, rows: int,
         def _acc():
             o_ref[0] += part
 
-        if has_bias or activation is not None:
+        if has_bias or has_add or activation is not None:
             @pl.when(t == taps - 1)
             def _epilogue():
                 acc = o_ref[0]
                 if has_bias:
                     acc = acc + b_ref[0].astype(jnp.float32)
+                if has_add:
+                    acc = acc + a_ref[0].astype(jnp.float32)
                 if activation == "relu":
                     acc = jnp.maximum(acc, 0.0)
                 o_ref[0] = acc
@@ -144,19 +211,28 @@ def _make_multirow_kernel(kw: int, ow: int, sh: int, sw: int, rows: int,
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding",
-                                             "activation", "tm", "rows",
-                                             "interpret"))
+                                             "activation", "pool",
+                                             "tm", "rows", "interpret"))
 def cuconv_fused(x, w, bias=None, stride=(1, 1), padding=(0, 0),
-                 activation=None, tm=128, rows=1, interpret=True):
+                 activation=None, addend=None, pool=None,
+                 tm=128, rows=1, interpret=True):
     """x: (N, H, W, C) NHWC; w: (KH, KW, C, M) HWIO; stride (sh, sw) >= 1.
 
     bias: optional (M,) added on the final tap; activation: None | 'relu',
     applied after bias — both fused in VMEM before the output write.
+    addend: optional (N, OH, OW, M) residual operand added after the
+    bias and before the activation (cross-layer add fusion).  pool:
+    optional ``(kind, psh, psw)`` non-overlapping max/avg pool (window
+    == stride, no padding) applied to the finished block in VMEM before
+    writeback; mutually exclusive with ``addend``.
     ``tm``/``rows`` are the launch configuration (output-channel tile and
     output rows per grid step); ``rows >= 2`` requires
     ``KH - 1 <= rows*sh`` (the multi-row halo rule — the planner's
-    ``config_supports`` prunes invalid candidates).
-    Returns (N, OH, OW, M) in x.dtype.
+    ``config_supports`` prunes invalid candidates).  ``pool`` always
+    takes the multi-row path and additionally needs ``rows % psh == 0``,
+    ``OH % rows == 0`` and ``OW % psw == 0``.
+    Returns (N, OH, OW, M) — pooled to (N, OH/psh, OW/psw, M) under
+    ``pool`` — in x.dtype.
     """
     N, H, W, C = x.shape
     KH, KW, _, M = w.shape
@@ -167,17 +243,34 @@ def cuconv_fused(x, w, bias=None, stride=(1, 1), padding=(0, 0),
     rows = min(int(rows), OH)
     if rows < 1:
         raise ValueError(f"rows must be >= 1; got {rows}")
-    if rows > 1 and KH - 1 > rows * sh:
+    if (rows > 1 or pool is not None) and KH - 1 > rows * sh:
         raise ValueError(
             f"multi-row blocking needs KH - 1 <= rows*sh to cover the tap "
             f"halo from two aligned input blocks; got KH={KH}, rows={rows}, "
             f"sh={sh}")
+    if pool is not None:
+        if addend is not None:
+            raise ValueError("pool and addend fusions are mutually "
+                             "exclusive (ConvSpec enforces this)")
+        kind, psh, psw = pool
+        if kind not in ("max", "avg"):
+            raise ValueError(f"pool kind must be 'max' or 'avg'; "
+                             f"got {pool!r}")
+        if rows % psh or OH % rows or OW % psw:
+            raise ValueError(
+                f"fused pool needs rows % psh == 0, OH % rows == 0 and "
+                f"OW % psw == 0; got rows={rows}, OH={OH}, OW={OW}, "
+                f"pool={pool!r}")
+    if addend is not None and addend.shape != (N, OH, OW, M):
+        raise ValueError(f"addend shape {addend.shape} != conv output "
+                         f"shape {(N, OH, OW, M)}")
     # widen rows so every tap's strided window slice stays in bounds:
     # max start KW-1 plus slice length OW*sw (== Wp when sw == 1)
     Wpad = KW - 1 + OW * sw
     (tm,), (pm,) = _compat.clamp_tiles((M,), (tm,))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pm)))
     has_bias = bias is not None
+    has_add = addend is not None
     kw_common = dict(
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
@@ -186,7 +279,7 @@ def cuconv_fused(x, w, bias=None, stride=(1, 1), padding=(0, 0),
         name="cuconv_fused",
     )
 
-    if rows == 1:
+    if rows == 1 and pool is None:
         xp = jnp.pad(x, ((0, 0), (ph, ph),
                          (pw, pw + max(0, Wpad - Wp)), (0, 0)))
         Wp = xp.shape[2]
@@ -206,8 +299,15 @@ def cuconv_fused(x, w, bias=None, stride=(1, 1), padding=(0, 0),
             in_specs.append(pl.BlockSpec((1, tm),
                                          lambda n, oh, m, t: (0, m)))
             operands.append(bp)
+        if has_add:
+            # the residual block rides the output's index_map
+            ap = jnp.pad(addend, ((0, 0), (0, 0), (0, 0), (0, pm)))
+            in_specs.append(pl.BlockSpec((1, 1, OW, tm),
+                                         lambda n, oh, m, t: (n, oh, 0, m)))
+            operands.append(ap)
         out = pl.pallas_call(
-            _make_kernel(KW, OW, sw, KH * KW, activation, has_bias),
+            _make_kernel(KW, OW, sw, KH * KW, activation, has_bias,
+                         has_add),
             grid=grid,
             in_specs=in_specs,
             # output row revisited across all taps (index_map ignores t)
@@ -242,9 +342,34 @@ def cuconv_fused(x, w, bias=None, stride=(1, 1), padding=(0, 0),
         bp = jnp.pad(bias.reshape(1, M), ((0, 0), (0, pm)))
         in_specs.append(pl.BlockSpec((1, tm), lambda n, oh, m, t: (0, m)))
         operands.append(bp)
+    if has_add:
+        # OH padded up to the block grid so the last step's residual
+        # block exists; the padded rows feed outputs sliced away below
+        ap = jnp.pad(addend, ((0, 0), (0, OHB * rows - OH), (0, 0),
+                              (0, pm)))
+        in_specs.append(pl.BlockSpec((1, rows, OW, tm),
+                                     lambda n, oh, m, t: (n, oh, 0, m)))
+        operands.append(ap)
+    if pool is not None:
+        kind, psh, psw = pool
+        out = pl.pallas_call(
+            _make_multirow_kernel(KW, OW, sh, sw, rows, KH * KW, activation,
+                                  has_bias, has_add, pool=(kind, psh, psw)),
+            grid=grid,
+            in_specs=in_specs,
+            # the output block is the POOLED tile: rows/psh rows per step
+            out_specs=pl.BlockSpec((1, rows // psh, OW // psw, tm),
+                                   lambda n, oh, m, t: (n, oh, 0, m)),
+            out_shape=jax.ShapeDtypeStruct(
+                (N, (OHB * rows) // psh, OW // psw, M + pm), jnp.float32),
+            # conv partials accumulate here, not in the output block
+            scratch_shapes=[pltpu.VMEM((rows, OW, tm), jnp.float32)],
+            **kw_common,
+        )(*operands)
+        return out[:, :OH // psh, :, :M].astype(x.dtype)
     out = pl.pallas_call(
         _make_multirow_kernel(KW, OW, sh, sw, rows, KH * KW, activation,
-                              has_bias),
+                              has_bias, has_add),
         grid=grid,
         in_specs=in_specs,
         # (rows, OW, TM) output block revisited across all taps
@@ -258,9 +383,15 @@ def cuconv_fused(x, w, bias=None, stride=(1, 1), padding=(0, 0),
 
 
 def vmem_bytes(x_shape, w_shape, tm=128, rows=1, pad=(0, 0), stride=(1, 1),
-               itemsize=4):
+               itemsize=4, addend=False, pool=None):
     """Static VMEM footprint estimate for the fused kernel's live blocks
-    under launch config ``(tm, rows)``."""
+    under launch config ``(tm, rows)``.
+
+    ``addend`` adds the residual input block (it rides the output
+    index_map, double buffered like any input); ``pool`` —
+    ``(kind, psh, psw)`` — adds the f32 scratch accumulator next to the
+    (smaller) pooled output block.
+    """
     N, H, W, C = x_shape
     KH, KW, _, M = w_shape
     sh, sw = stride
@@ -271,8 +402,14 @@ def vmem_bytes(x_shape, w_shape, tm=128, rows=1, pad=(0, 0), stride=(1, 1),
     tm = min(int(tm), M)
     wtap = C * tm * itemsize
     out = rows * OW * tm * 4                     # f32 accumulator
+    if pool is not None:
+        _, psh, psw = pool
+        # scratch accumulator + the pooled output block
+        out = rows * OW * tm * 4 \
+            + (rows // max(1, psh)) * (OW // max(1, psw)) * tm * 4
+    add_blk = 2 * rows * OW * tm * itemsize if addend else 0
     row_bytes = (KW - 1 + OW * sw) * C * itemsize
-    if rows == 1:
-        return 2 * (row_bytes + wtap) + out      # x2: input double buffering
+    if rows == 1 and pool is None:
+        return 2 * (row_bytes + wtap) + out + add_blk  # x2: double buffering
     blk = rows * sh * row_bytes                  # one aligned H block
-    return 2 * (2 * blk + wtap) + out            # two staged blocks per step
+    return 2 * (2 * blk + wtap) + out + add_blk  # two staged blocks per step

@@ -67,17 +67,22 @@ def cuconv_two_stage(x, w, padding=(0, 0), interpret=None,
 
 
 def cuconv_fused(x, w, padding=(0, 0), stride=1, bias=None, activation=None,
-                 interpret=None, tm=128, rows=1):
+                 addend=None, pool=None, interpret=None, tm=128, rows=1):
     """Single-kernel fused cuConv, any stride >= 1, optional fused
     bias+activation epilogue.
 
     Policy-free executor: VMEM-budget fallback and algorithm choice live
     in core.convspec.plan — calling this directly always runs the fused
     kernel.  ``tm``/``rows`` are its launch config (output-channel tile,
-    output rows per grid step; see kernels/cuconv_fused.py).
+    output rows per grid step; see kernels/cuconv_fused.py).  ``addend``
+    (residual second operand) and ``pool`` (``(kind, psh, psw)``
+    non-overlapping pool) are the cross-layer fusions of DESIGN.md §10,
+    executed in VMEM before the single output write.
     """
     return _cf.cuconv_fused(x, w, bias, stride=_norm_stride(stride),
                             padding=tuple(padding), activation=activation,
+                            addend=addend,
+                            pool=tuple(pool) if pool is not None else None,
                             tm=tm, rows=rows,
                             interpret=_auto_interpret(interpret))
 

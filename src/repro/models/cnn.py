@@ -101,17 +101,18 @@ class GraphModel:
 
     def graph_plan(self, in_shape, *, backend: Optional[str] = None,
                    force: Optional[str] = None, dtype: str = "float32",
-                   precision=None) -> GraphPlan:
+                   precision=None, fuse: bool = True) -> GraphPlan:
         """The whole-network plan for one input geometry, resolved once
-        per (geometry, backend, force, precision) and memoized on the
-        model."""
+        per (geometry, backend, force, precision, fuse) and memoized on
+        the model.  ``fuse=False`` serves the unfused program (the
+        cross-layer fusion pass is on by default)."""
         backend = backend or jax.default_backend()
         pol = self._policy(precision, dtype)
-        key = (tuple(map(int, in_shape)), backend, force, pol.key())
+        key = (tuple(map(int, in_shape)), backend, force, pol.key(), fuse)
         gp = self._plan_cache.get(key)
         if gp is None:
             gp = plan_graph(self.graph(in_shape, precision=pol),
-                            backend=backend, force=force)
+                            backend=backend, force=force, fuse=fuse)
             self._plan_cache[key] = gp
         return gp
 

@@ -50,7 +50,8 @@ class CnnServeEngine:
 
     def __init__(self, model, params, image_shape: Tuple[int, int, int], *,
                  buckets: Tuple[int, ...] = (1, 4, 8), algorithm="auto",
-                 backend: Optional[str] = None, precision=None):
+                 backend: Optional[str] = None, precision=None,
+                 fuse: bool = True):
         self.model, self.params = model, params
         self.image_shape = tuple(map(int, image_shape))     # (H, W, C)
         self.buckets = tuple(sorted({int(b) for b in buckets}))
@@ -63,6 +64,10 @@ class CnnServeEngine:
         # Master params stay fp32 — conv nodes cast per their specs, so
         # the same engine params serve any policy.
         self.precision = precision
+        # cross-layer fusion pass (on by default); fuse=False serves
+        # every bucket's unfused program — the escape hatch mirrors
+        # plan_graph's
+        self.fuse = fuse
         self.queue: List[ImageRequest] = []
         self._fns: Dict[int, Callable] = {}    # bucket -> jitted program
         self.stats = {"images": 0, "padded_slots": 0,
@@ -80,7 +85,7 @@ class CnnServeEngine:
             gp = self.model.graph_plan(
                 (b,) + self.image_shape, backend=self.backend,
                 force=None if self.algorithm == "auto" else self.algorithm,
-                precision=self.precision)
+                precision=self.precision, fuse=self.fuse)
             fn = jax.jit(lambda params, xb: self.model.apply(
                 params, xb, graph_plan=gp))
             self._fns[b] = fn
@@ -105,7 +110,8 @@ class CnnServeEngine:
         for b in self.buckets:
             if tune is not None and self.algorithm == "auto":
                 self.model.graph_plan((b, H, W, C), backend=self.backend,
-                                      precision=self.precision) \
+                                      precision=self.precision,
+                                      fuse=self.fuse) \
                     .warmup(tune=tune)
                 # the measured sweep may have swapped node plans: an
                 # already-compiled program would keep serving the stale

@@ -5,3 +5,13 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_plan_counters():
+    """Zero the observability counters between tests so assertions like
+    ``PLAN_STATS["resolutions"] == 0`` never see another test's work."""
+    from repro.core import autotune, convspec
+    convspec.reset_plan_stats()
+    autotune.reset_measure_stats()
+    yield

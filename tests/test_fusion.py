@@ -1,0 +1,270 @@
+"""Cross-layer fusion pass (DESIGN.md §10): IR rewriting, capability
+negotiation, cache-key discipline, and numerics of the fused programs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, executors
+from repro.core import graph as g
+from repro.core.convspec import ConvSpec, plan
+from repro.core.graph import GraphBuilder, fuse_graph, plan_graph
+from repro.kernels import ops
+from repro.models.cnn import fire_like, resnet_like
+
+
+def _tiny_residual():
+    b = GraphBuilder((1, 8, 8, 3))
+    stem = b.conv("stem", "input", 3, 4)
+    c1 = b.conv("c1", stem, 3, 4, epilogue="bias")
+    b.add("sum", (stem, c1), activation="relu")
+    return b.graph()
+
+
+def _conv_pool():
+    b = GraphBuilder((2, 8, 8, 3))
+    y = b.conv("c0", "input", 3, 8)
+    b.pool("pool", y, kind="max", window=2)
+    return b.graph()
+
+
+def _params_for(graph, rng, scale=0.1):
+    params = {}
+    for n in graph.nodes:
+        if isinstance(n, g.ConvOp):
+            s = n.spec
+            params[n.name] = {
+                "w": jnp.asarray(rng.standard_normal(
+                    s.filter_shape, dtype=np.float32) * scale)}
+            if s.has_bias:
+                params[n.name]["b"] = jnp.asarray(rng.standard_normal(
+                    (s.filter_shape[3],), dtype=np.float32) * scale)
+        elif isinstance(n, g.DenseOp):
+            ci, co = n.features
+            params[n.name] = {"w": jnp.asarray(rng.standard_normal(
+                (ci, co), dtype=np.float32) * scale)}
+            if n.bias:
+                params[n.name]["b"] = jnp.zeros((co,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# the rewrite rules
+
+def test_residual_add_folds_into_conv():
+    gph = _tiny_residual()
+    fg, fmap = fuse_graph(gph)
+    assert fmap == {"c1": "add:sum"}
+    assert [n.name for n in fg.nodes] == ["stem", "c1"]
+    c1 = fg.node("c1")
+    assert c1.spec.fused_add == "add_relu"      # add's ReLU absorbed
+    assert c1.inputs == ("stem", "stem")        # shortcut as 2nd operand
+    assert fg.output == "c1"                    # output follows the fold
+    assert fg.shapes["c1"] == gph.shapes["sum"]
+
+
+def test_conv_pool_folds_into_conv():
+    gph = _conv_pool()
+    fg, fmap = fuse_graph(gph)
+    assert fmap == {"c0": "pool:pool"}
+    c0 = fg.node("c0")
+    assert c0.spec.fused_pool == ("max", 2, 2, 2, 2, 0, 0)
+    assert fg.shapes["c0"] == gph.shapes["pool"]    # pooled final_shape
+    assert fg.output == "c0"
+
+
+def test_resnet_like_fuses_add_and_pool():
+    """Acceptance: the pass folds >= 1 residual add AND >= 1 conv->pool
+    chain out of resnet_like (11 IR nodes -> 8, three fewer launches)."""
+    gg = resnet_like(num_classes=4).graph((1, 16, 16, 3))
+    fg, fmap = fuse_graph(gg)
+    kinds = [v.split(":")[0] for v in fmap.values()]
+    assert kinds.count("add") >= 1 and kinds.count("pool") >= 1
+    assert len(fg) == len(gg) - len(fmap)
+    assert fmap == {"stem": "pool:pool", "b1c2": "add:b1add",
+                    "b2proj": "add:b2add"}
+
+
+def test_multi_consumer_and_non_conv_producers_do_not_fuse():
+    # stem feeds both the add AND c1: folding it would orphan c1's input
+    b = GraphBuilder((1, 8, 8, 3))
+    stem = b.conv("stem", "input", 3, 4, epilogue="bias")
+    c1 = b.conv("c1", stem, 3, 4, epilogue="bias_relu")  # relu epilogue
+    b.add("sum", (stem, c1))
+    fg, fmap = fuse_graph(b.graph())
+    # c1 has a relu epilogue (not none/bias) and stem has two consumers:
+    # neither leg is fusable
+    assert fmap == {} and fg is b.graph() or len(fg) == 3
+
+    # fire_like's avg pool consumes a CONCAT, not a conv: no pool fold
+    gg = fire_like(num_classes=4).graph((1, 16, 16, 3))
+    _, fmap2 = fuse_graph(gg)
+    assert not any(v.startswith("pool") for v in fmap2.values())
+
+
+def test_fused_convspec_cache_keys_are_distinct():
+    base = ConvSpec((1, 8, 8, 4), (3, 3, 4, 8), epilogue="bias")
+    fadd = dataclasses.replace(base, fused_add="add")
+    faddr = dataclasses.replace(base, fused_add="add_relu")
+    fpool = dataclasses.replace(base,
+                                fused_pool=("max", 2, 2, 2, 2, 0, 0))
+    keys = {base.key(), fadd.key(), faddr.key(), fpool.key()}
+    assert len(keys) == 4
+    assert fadd.key().endswith("-fadd")
+    assert faddr.key().endswith("-faddrelu")
+    assert fpool.key().endswith("-fpoolmax2x2s2x2p0x0")
+    # and the fused spec round-trips back to the base one
+    assert fadd.unfused().key() == base.key()
+    assert fpool.unfused().key() == base.key()
+
+
+# ---------------------------------------------------------------------------
+# capability negotiation
+
+def test_fusion_is_capability_negotiated():
+    spec = ConvSpec((1, 8, 8, 4), (3, 3, 4, 8), epilogue="bias",
+                    fused_add="add")
+    # every non-epilogue-fusing executor gets add/pool for free (XLA
+    # epilogue); the Pallas fused executor opts in per geometry
+    assert "add" in executors.get("lax").fusions(spec)
+    assert "add" in executors.get("cuconv_pallas").fusions(spec)
+    assert executors.supporting(spec)
+    p = plan(spec)
+    assert p.algorithm in executors.supporting(spec)
+
+    # an overlapping pool window is NOT in the Pallas executor's fused
+    # vocabulary (window must equal stride, zero pad) — the spec still
+    # plans, via executors that run the pool as an XLA epilogue
+    overlap = ConvSpec((1, 9, 9, 4), (3, 3, 4, 8), epilogue="bias",
+                       fused_pool=("max", 3, 3, 2, 2, 0, 0))
+    assert "pool" not in executors.get("cuconv_pallas").fusions(overlap)
+    assert not executors.get("cuconv_pallas").supports(overlap)[0]
+    assert "lax" in executors.supporting(overlap)
+
+
+def test_fusion_verdict_gates_rewrite(tmp_path, monkeypatch):
+    """A persisted tune="full" measurement saying the fusion LOSES keeps
+    the graph unfused; unmeasured specs fuse optimistically."""
+    gph = _tiny_residual()
+    fg, fmap = fuse_graph(gph)
+    assert fmap            # optimistic without a verdict
+    fused_spec = fg.node("c1").spec
+    backend = jax.default_backend()
+    key = autotune._key(fused_spec, backend)
+    entry = dict(autotune._STORE.get(key) or
+                 {"schema": autotune.AUTOTUNE_SCHEMA})
+    try:
+        entry["fusion"] = {"wins": False, "fused_us": 2.0,
+                           "unfused_us": 1.0}
+        autotune._STORE.put(key, entry)
+        assert autotune.fusion_verdict(fused_spec, backend) is False
+        fg2, fmap2 = fuse_graph(gph)
+        assert fmap2 == {} and len(fg2) == 3
+    finally:
+        entry.pop("fusion", None)
+        autotune._STORE.put(key, entry)
+
+
+def test_measure_fusion_persists_verdict():
+    spec = ConvSpec((1, 8, 8, 3), (3, 3, 3, 4), epilogue="bias",
+                    fused_add="add")
+    before = autotune.MEASURE_STATS["fusion_sweeps"]
+    got = autotune.measure_fusion(spec, repeats=1, force=True)
+    assert got in (True, False)
+    assert autotune.MEASURE_STATS["fusion_sweeps"] == before + 1
+    assert autotune.fusion_verdict(spec) is got
+    with pytest.raises(ValueError):
+        autotune.measure_fusion(spec.unfused())
+
+
+# ---------------------------------------------------------------------------
+# planned-program numerics (the property the pass must preserve)
+
+@pytest.mark.parametrize("precision,tol", [(None, 2e-5), ("bf16", 4e-2)])
+def test_resnet_fused_matches_unfused(rng, precision, tol):
+    m = resnet_like(num_classes=4)
+    gg = m.graph((2, 16, 16, 3))
+    params = _params_for(gg, rng)
+    gpf = m.graph_plan((2, 16, 16, 3), precision=precision)
+    gpu = m.graph_plan((2, 16, 16, 3), precision=precision, fuse=False)
+    assert gpf.fused and not gpu.fused
+    assert len(gpf.graph) < len(gpu.graph)      # fewer kernel launches
+    for batch in range(3):                       # property: random draws
+        x = jnp.asarray(rng.standard_normal((2, 16, 16, 3),
+                                            dtype=np.float32))
+        yf = np.asarray(gpf.run(x, params), np.float32)
+        yu = np.asarray(gpu.run(x, params), np.float32)
+        np.testing.assert_allclose(yf, yu, rtol=tol, atol=tol)
+
+
+def test_forced_fused_kernel_matches_reference(rng):
+    """The Pallas fused kernel itself (addend + in-VMEM pool), forced on
+    every node of a residual+pool graph, matches the unfused program."""
+    b = GraphBuilder((1, 8, 8, 4))
+    c0 = b.conv("c0", "input", 3, 8)
+    c1 = b.conv("c1", c0, 3, 8, epilogue="bias")
+    s = b.add("sum", (c0, c1), activation="relu")
+    b.pool("pool", s, kind="max", window=2)
+    gph = b.graph()
+    params = _params_for(gph, rng)
+    gpf = plan_graph(gph, force="cuconv_pallas", use_cache=False)
+    assert set(gpf.fused) == {"c1"}     # sum folds into c1; pool then
+    # consumes a conv that already fused an add -> stays a PoolOp node
+    gpu = plan_graph(gph, force="cuconv_pallas", use_cache=False,
+                     fuse=False)
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 4), dtype=np.float32))
+    np.testing.assert_allclose(np.asarray(gpf.run(x, params)),
+                               np.asarray(gpu.run(x, params)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_forced_pool_fusion_kernel(rng):
+    gph = _conv_pool()
+    params = _params_for(gph, rng)
+    gpf = plan_graph(gph, force="cuconv_pallas", use_cache=False)
+    assert gpf.fused == {"c0": "pool:pool"}
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3), dtype=np.float32))
+    y = gpf.run(x, params)
+    ref = ops.pool2d(
+        ops.cuconv_fused(x, params["c0"]["w"], padding=(1, 1),
+                         bias=params["c0"]["b"], activation="relu"),
+        "max", (2, 2), (2, 2))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# plan/provenance surfaces
+
+def test_explain_reports_fused_provenance():
+    m = resnet_like(num_classes=4)
+    txt = m.graph_plan((1, 16, 16, 3)).explain()
+    assert "fused[pool]=pool" in txt
+    assert "fused[add]=b1add" in txt
+    assert "fused[add]=b2add" in txt
+    # the unfused program shows none
+    assert "fused[" not in m.graph_plan((1, 16, 16, 3), fuse=False).explain()
+
+
+def test_graph_cache_hit_with_fusion_is_zero_resolution():
+    from repro.core import convspec as cs
+    gph = _tiny_residual()
+    gp1 = plan_graph(gph)
+    assert gp1.source == "resolved" and gp1.fused
+    g.clear_cache()
+    cs.reset_plan_stats()
+    gp2 = plan_graph(gph)
+    assert gp2.source == "graph_cache"
+    assert cs.PLAN_STATS["resolutions"] == 0
+    assert gp2.fused == gp1.fused
+
+
+def test_warmup_compiles_fused_nodes(rng):
+    gp = plan_graph(_tiny_residual(), use_cache=False)
+    stats = gp.warmup()
+    assert {r["node"] for r in stats["nodes"]} == {"stem", "c1"}
+    keys = {r["node"]: r["key"] for r in stats["nodes"]}
+    assert keys["c1"].endswith("-faddrelu")     # tuned under the fused key

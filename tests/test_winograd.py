@@ -1,0 +1,60 @@
+"""Numeric tests for the dormant F(2x2, 3x3) Winograd path.
+
+core/winograd.py predates the executor registry's pallas-backed
+winograd and stays as the reference decomposition; these tests pin it
+against ``lax.conv_general_dilated`` so the module can't rot silently.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.winograd import conv_winograd
+
+
+def _conv_ref(x, w, padding):
+    if padding == "same":
+        pads = ((1, 1), (1, 1))
+    elif padding == "valid":
+        pads = ((0, 0), (0, 0))
+    else:
+        ph, pw = ((padding, padding) if isinstance(padding, int)
+                  else padding)
+        pads = ((ph, ph), (pw, pw))
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (1, 1), pads,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+@pytest.mark.parametrize("padding", ["same", "valid", 0, 1, 2, (2, 1)])
+@pytest.mark.parametrize("shape", [(1, 8, 8, 3, 4), (2, 9, 7, 5, 6)])
+def test_winograd_matches_lax(rng, padding, shape):
+    n, h, w_, c, m = shape
+    x = jnp.asarray(rng.standard_normal((n, h, w_, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, c, m)), jnp.float32)
+    got = conv_winograd(x, w, padding=padding)
+    want = _conv_ref(x, w, padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_winograd_bf16_inputs(rng):
+    """bf16 operands: the transform computes in fp32 (the module casts
+    up), so the result tracks the fp32 reference within bf16 input
+    rounding."""
+    xf = jnp.asarray(rng.standard_normal((1, 10, 10, 4)), jnp.float32)
+    wf = jnp.asarray(rng.standard_normal((3, 3, 4, 8)), jnp.float32)
+    x, w = xf.astype(jnp.bfloat16), wf.astype(jnp.bfloat16)
+    got = conv_winograd(x, w, padding="same")
+    want = _conv_ref(x.astype(jnp.float32), w.astype(jnp.float32), "same")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+def test_winograd_rejects_non3x3_and_stride():
+    x = jnp.zeros((1, 8, 8, 3), jnp.float32)
+    with pytest.raises(AssertionError, match="3x3"):
+        conv_winograd(x, jnp.zeros((5, 5, 3, 4), jnp.float32))
+    with pytest.raises(AssertionError, match="stride"):
+        conv_winograd(x, jnp.zeros((3, 3, 3, 4), jnp.float32), stride=2)
