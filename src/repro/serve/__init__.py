@@ -1,2 +1,6 @@
 from repro.serve.engine import ServeEngine, Request  # noqa: F401
-from repro.serve.cnn import CnnServeEngine, ImageRequest  # noqa: F401
+from repro.serve.cnn import (  # noqa: F401
+    BucketPrograms, CnnServeEngine, ImageRequest)
+from repro.serve.frontend import (  # noqa: F401
+    AsyncServeFrontend, DeadlineExceeded, ServeRequest)
+from repro.serve.telemetry import Telemetry  # noqa: F401

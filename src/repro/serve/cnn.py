@@ -17,12 +17,18 @@ request mix with zero plan() resolutions and at most ``len(buckets)``
 compiled shapes.  A graph-wide ``PrecisionPolicy`` (``precision="bf16"``)
 plans every bucket program in reduced precision end to end — fp32
 master params, fp32 accumulation, precision-distinct cache keys.
+
+Bucket-program building lives in ``BucketPrograms`` so the synchronous
+drain engine here and the continuous-batching ``AsyncServeFrontend``
+(serve/frontend.py) share one component: one geometry, one bucket set,
+one packing dtype (``input_dtype()`` — warmup compiles exactly the
+trace that serves), at most ``len(buckets)`` compiled programs.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,13 +51,70 @@ class ImageRequest:
                              f"got shape {self.images.shape}")
 
 
-class CnnServeEngine:
-    """Serve image-classification traffic through batch-bucketed plans."""
+# ---------------------------------------------------------------------------
+# packing: per-image units -> one contiguous batch array
+
+def contiguous_blocks(chunk: Sequence[Tuple[ImageRequest, int]]
+                      ) -> List[Tuple[ImageRequest, int, int]]:
+    """Collapse ``(request, image_index)`` units into maximal contiguous
+    ``(request, i0, i1)`` slices — units are generated in per-request
+    index order, so consecutive units of one request always coalesce."""
+    blocks: List[List] = []
+    for r, i in chunk:
+        if blocks and blocks[-1][0] is r and blocks[-1][2] == i:
+            blocks[-1][2] = i + 1
+        else:
+            blocks.append([r, i, i + 1])
+    return [tuple(b) for b in blocks]
+
+
+def pack_units(chunk: Sequence[Tuple[ImageRequest, int]], bucket: int,
+               image_shape: Tuple[int, int, int],
+               dtype: np.dtype) -> np.ndarray:
+    """Stack a chunk of units into a ``(bucket, H, W, C)`` batch in one
+    vectorized pass: contiguous request slices are concatenated (no
+    per-image copy loop) and short chunks get zero-padded tail slots.
+    Every slice is cast to ``dtype`` so the packed batch always matches
+    the dtype the bucket programs were compiled for."""
+    parts = [np.asarray(r.images[i0:i1], dtype)
+             for r, i0, i1 in contiguous_blocks(chunk)]
+    pad = bucket - len(chunk)
+    if pad:
+        parts.append(np.zeros((pad,) + tuple(image_shape), dtype))
+    return np.concatenate(parts, axis=0)
+
+
+def scatter_outputs(chunk: Sequence[Tuple[ImageRequest, int]],
+                    y: np.ndarray) -> None:
+    """Write batch outputs back into each request's ``out`` rows,
+    block-wise (the inverse of ``pack_units``; padded rows ignored)."""
+    off = 0
+    for r, i0, i1 in contiguous_blocks(chunk):
+        if r.out is None:
+            r.out = np.zeros((r.images.shape[0], y.shape[-1]), y.dtype)
+        r.out[i0:i1] = y[off:off + (i1 - i0)]
+        off += i1 - i0
+
+
+# ---------------------------------------------------------------------------
+# the reusable bucket-program component
+
+class BucketPrograms:
+    """One geometry's bucket programs: build, warm, pick, pack.
+
+    Owns the ``{bucket: jitted whole-network program}`` table for one
+    ``(image_shape, buckets)`` pair — the component both serving layers
+    are built from (``CnnServeEngine`` holds one; ``AsyncServeFrontend``
+    holds one per geometry).  ``input_dtype()`` is the single source of
+    truth for the dtype requests are packed to AND the dtype
+    ``warmup()``'s dummy compiles, so a warm program can never be asked
+    to retrace at serve time because the two paths disagreed.
+    """
 
     def __init__(self, model, params, image_shape: Tuple[int, int, int], *,
                  buckets: Tuple[int, ...] = (1, 4, 8), algorithm="auto",
                  backend: Optional[str] = None, precision=None,
-                 fuse: bool = True):
+                 fuse: bool = True, input_dtype=None):
         self.model, self.params = model, params
         self.image_shape = tuple(map(int, image_shape))     # (H, W, C)
         self.buckets = tuple(sorted({int(b) for b in buckets}))
@@ -59,37 +122,49 @@ class CnnServeEngine:
             raise ValueError(f"buckets must be positive ints; got {buckets}")
         self.algorithm = algorithm
         self.backend = backend or jax.default_backend()
-        # graph-wide PrecisionPolicy (e.g. "bf16") for every bucket
-        # program; None defers to the model's own policy / fp32 inputs.
-        # Master params stay fp32 — conv nodes cast per their specs, so
-        # the same engine params serve any policy.
         self.precision = precision
-        # cross-layer fusion pass (on by default); fuse=False serves
-        # every bucket's unfused program — the escape hatch mirrors
-        # plan_graph's
         self.fuse = fuse
-        self.queue: List[ImageRequest] = []
+        self._input_dtype = np.dtype(input_dtype or np.float32)
         self._fns: Dict[int, Callable] = {}    # bucket -> jitted program
-        self.stats = {"images": 0, "padded_slots": 0,
-                      "batches": {b: 0 for b in self.buckets}}
 
     # ------------------------------------------------------------------
+    def input_dtype(self) -> np.dtype:
+        """The one packing/compile dtype.  Host inputs stay fp32 by
+        default regardless of the PrecisionPolicy — the planned conv
+        nodes cast operands to their spec dtype, and master inputs
+        (like master params) are served full-precision.  Engines built
+        with ``input_dtype=`` feed that dtype instead; either way,
+        ``warmup`` and the packers both read THIS value."""
+        return self._input_dtype
+
     @property
     def compiled_buckets(self) -> Tuple[int, ...]:
         """Batch sizes with a built program — never exceeds ``buckets``."""
         return tuple(sorted(self._fns))
 
-    def _bucket_fn(self, b: int) -> Callable:
-        fn = self._fns.get(b)
-        if fn is None:
+    def pick_bucket(self, pending: int) -> int:
+        """Largest bucket the pending unit count fills, else the
+        smallest bucket (its tail slots ride zero-padded)."""
+        fits = [b for b in self.buckets if b <= pending]
+        return max(fits) if fits else self.buckets[0]
+
+    def fn(self, b: int) -> Callable:
+        """The jitted program for bucket ``b`` (built on first use)."""
+        f = self._fns.get(b)
+        if f is None:
             gp = self.model.graph_plan(
                 (b,) + self.image_shape, backend=self.backend,
                 force=None if self.algorithm == "auto" else self.algorithm,
                 precision=self.precision, fuse=self.fuse)
-            fn = jax.jit(lambda params, xb: self.model.apply(
+            f = jax.jit(lambda params, xb: self.model.apply(
                 params, xb, graph_plan=gp))
-            self._fns[b] = fn
-        return fn
+            self._fns[b] = f
+        return f
+
+    def pack(self, chunk: Sequence[Tuple[ImageRequest, int]],
+             bucket: int) -> np.ndarray:
+        return pack_units(chunk, bucket, self.image_shape,
+                          self.input_dtype())
 
     def warmup(self, *, measure: bool = False,
                tune: Optional[str] = None) -> Dict[int, float]:
@@ -101,6 +176,8 @@ class CnnServeEngine:
         embed the measured ``(algorithm, config)`` winners — a served
         graph is tuned once here and replayed from cache ever after.
         ``measure=True`` is the back-compat spelling of ``tune="algo"``.
+        The compile dummy is ``input_dtype()`` — exactly the dtype the
+        packers feed — so warmup compiles exactly the trace that serves.
         Returns per-bucket compile milliseconds.
         """
         if measure and tune is None:
@@ -117,12 +194,78 @@ class CnnServeEngine:
                 # already-compiled program would keep serving the stale
                 # trace, so force a rebuild
                 self._fns.pop(b, None)
-            fn = self._bucket_fn(b)
-            x = jnp.zeros((b, H, W, C), jnp.float32)
+            f = self.fn(b)
+            x = jnp.zeros((b, H, W, C), jnp.dtype(self.input_dtype()))
             t0 = time.perf_counter()
-            fn(self.params, x).block_until_ready()
+            f(self.params, x).block_until_ready()
             out[b] = (time.perf_counter() - t0) * 1e3
         return out
+
+
+# ---------------------------------------------------------------------------
+# the synchronous drain engine
+
+class CnnServeEngine:
+    """Serve image-classification traffic through batch-bucketed plans."""
+
+    def __init__(self, model, params, image_shape: Tuple[int, int, int], *,
+                 buckets: Tuple[int, ...] = (1, 4, 8), algorithm="auto",
+                 backend: Optional[str] = None, precision=None,
+                 fuse: bool = True, input_dtype=None):
+        # graph-wide PrecisionPolicy (e.g. "bf16") for every bucket
+        # program; None defers to the model's own policy / fp32 inputs.
+        # Master params stay fp32 — conv nodes cast per their specs, so
+        # the same engine params serve any policy.  fuse=False serves
+        # every bucket's unfused program (mirrors plan_graph's hatch).
+        self.programs = BucketPrograms(
+            model, params, image_shape, buckets=buckets,
+            algorithm=algorithm, backend=backend, precision=precision,
+            fuse=fuse, input_dtype=input_dtype)
+        self.queue: List[ImageRequest] = []
+        self.stats = {"requests": 0, "images": 0, "padded_slots": 0,
+                      "batches": {b: 0 for b in self.programs.buckets}}
+
+    # -- thin views over the shared component --------------------------
+    @property
+    def model(self):
+        return self.programs.model
+
+    @property
+    def params(self):
+        return self.programs.params
+
+    @property
+    def image_shape(self) -> Tuple[int, int, int]:
+        return self.programs.image_shape
+
+    @property
+    def buckets(self) -> Tuple[int, ...]:
+        return self.programs.buckets
+
+    @property
+    def precision(self):
+        return self.programs.precision
+
+    @property
+    def compiled_buckets(self) -> Tuple[int, ...]:
+        return self.programs.compiled_buckets
+
+    @property
+    def _fns(self) -> Dict[int, Callable]:
+        # the live program table (tests and callers may inspect/patch it)
+        return self.programs._fns
+
+    def _bucket_fn(self, b: int) -> Callable:
+        return self.programs.fn(b)
+
+    def _pick_bucket(self, pending: int) -> int:
+        return self.programs.pick_bucket(pending)
+
+    def warmup(self, *, measure: bool = False,
+               tune: Optional[str] = None) -> Dict[int, float]:
+        """Resolve + compile every bucket program (see
+        ``BucketPrograms.warmup``)."""
+        return self.programs.warmup(measure=measure, tune=tune)
 
     # ------------------------------------------------------------------
     def submit(self, req: ImageRequest) -> None:
@@ -131,10 +274,6 @@ class CnnServeEngine:
                              f"{req.images.shape[1:]} != engine shape "
                              f"{self.image_shape}")
         self.queue.append(req)
-
-    def _pick_bucket(self, pending: int) -> int:
-        fits = [b for b in self.buckets if b <= pending]
-        return max(fits) if fits else self.buckets[0]
 
     def run(self) -> List[ImageRequest]:
         """Drain the queue; returns the served requests (outputs filled).
@@ -148,17 +287,12 @@ class CnnServeEngine:
             units.extend((r, i) for i in range(r.images.shape[0]))
         cursor = 0
         while cursor < len(units):
-            b = self._pick_bucket(len(units) - cursor)
+            b = self.programs.pick_bucket(len(units) - cursor)
             chunk = units[cursor:cursor + b]
-            xb = np.zeros((b,) + self.image_shape, np.float32)
-            for j, (r, i) in enumerate(chunk):
-                xb[j] = r.images[i]
-            y = np.asarray(self._bucket_fn(b)(self.params, jnp.asarray(xb)))
-            for j, (r, i) in enumerate(chunk):
-                if r.out is None:
-                    r.out = np.zeros((r.images.shape[0], y.shape[-1]),
-                                     y.dtype)
-                r.out[i] = y[j]
+            xb = self.programs.pack(chunk, b)
+            y = np.asarray(self.programs.fn(b)(self.params,
+                                               jnp.asarray(xb)))
+            scatter_outputs(chunk, y)
             self.stats["batches"][b] += 1
             self.stats["padded_slots"] += b - len(chunk)
             self.stats["images"] += len(chunk)
@@ -166,6 +300,7 @@ class CnnServeEngine:
         # only a fully drained queue is cleared: a failure above leaves
         # every request submitted (outputs rewrite idempotently on retry)
         self.queue = []
+        self.stats["requests"] += len(served)
         for r in served:
             r.done = True
         return served

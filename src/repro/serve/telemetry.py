@@ -1,0 +1,139 @@
+"""Per-request serving telemetry: latency stages and percentile rollups.
+
+Every request served by the async front end (serve/frontend.py) leaves a
+``RequestTrace`` — how long it queued, how long its batches spent in
+host→device transfer, how long the device computed, and the wall total —
+and every dispatched batch leaves a ``BatchTrace`` (geometry, bucket,
+padding, the transfer/dispatch/harvest timeline, and whether its
+transfer overlapped an in-flight batch — the double-buffering signal).
+``Telemetry.rollup()`` turns the traces into the machine-readable
+summary ``frontend.stats()`` exposes and ``BENCH_graph_serve.json``
+records: p50/p95/p99 per stage, deadline-miss counts, overlap counters.
+
+The module is deliberately model-free: it never imports jax and knows
+nothing about programs or plans, so any serving layer can record into
+it.  All times are seconds from one injected monotonic clock; rollups
+convert to milliseconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+#: the latency stages every request is accounted under (ms in rollups)
+STAGES = ("queue", "transfer", "compute", "total")
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (numpy's default method), monotone
+    in ``q`` by construction — so p99 >= p95 >= p50 always holds."""
+    if not xs:
+        raise ValueError("percentile of empty sequence")
+    s = sorted(float(x) for x in xs)
+    if len(s) == 1:
+        return s[0]
+    pos = (q / 100.0) * (len(s) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    frac = pos - lo
+    return s[lo] * (1.0 - frac) + s[hi] * frac
+
+
+def rollup_percentiles(xs: Sequence[float],
+                       qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` for one latency series."""
+    return {f"p{int(q)}": percentile(xs, q) for q in qs}
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    """One served (or rejected) request's latency accounting.
+
+    ``transfer_ms``/``compute_ms`` sum over every batch that carried one
+    of the request's images — a request larger than the biggest bucket
+    experiences several transfer/compute windows and is charged all of
+    them.  ``compute_ms`` is the in-flight window (dispatch → observed
+    completion): with double buffering it may include time queued behind
+    the previous batch on the device, which is exactly what the request
+    experienced.
+    """
+    rid: int
+    geometry: str                       # "HxWxC"
+    images: int
+    status: str                         # "served" | "deadline_exceeded"
+    deadline_ms: Optional[float]
+    queue_ms: float
+    transfer_ms: float
+    compute_ms: float
+    total_ms: float
+
+    def stage_ms(self, stage: str) -> float:
+        return getattr(self, f"{stage}_ms")
+
+
+@dataclasses.dataclass
+class BatchTrace:
+    """One dispatched batch's timeline (all times: seconds on the
+    frontend's clock).  ``overlapped`` is True when this batch's
+    host→device transfer started while a previous batch was still in
+    flight on the device — the double-buffering overlap signal the CI
+    smoke test asserts on."""
+    geometry: str
+    bucket: int
+    units: int                          # real (non-padded) images
+    padded: int
+    transfer_t0: float
+    transfer_t1: float
+    dispatch_t: float
+    harvest_t: float = 0.0
+    overlapped: bool = False
+
+    @property
+    def transfer_ms(self) -> float:
+        return (self.transfer_t1 - self.transfer_t0) * 1e3
+
+    @property
+    def compute_ms(self) -> float:
+        return (self.harvest_t - self.dispatch_t) * 1e3
+
+
+class Telemetry:
+    """Accumulates request/batch traces and rolls them up."""
+
+    def __init__(self):
+        self.requests: List[RequestTrace] = []
+        self.batches: List[BatchTrace] = []
+        self.deadline_misses = 0
+
+    def record_request(self, trace: RequestTrace) -> None:
+        self.requests.append(trace)
+        if trace.status == "deadline_exceeded":
+            self.deadline_misses += 1
+
+    def record_batch(self, trace: BatchTrace) -> None:
+        self.batches.append(trace)
+
+    # ------------------------------------------------------------------
+    def latency_ms(self) -> Dict[str, Dict[str, float]]:
+        """p50/p95/p99 per stage over the *served* requests."""
+        served = [t for t in self.requests if t.status == "served"]
+        if not served:
+            return {}
+        return {stage: rollup_percentiles([t.stage_ms(stage)
+                                           for t in served])
+                for stage in STAGES}
+
+    def rollup(self) -> Dict:
+        """The JSON-ready summary ``frontend.stats()`` builds on."""
+        served = [t for t in self.requests if t.status == "served"]
+        return {
+            "requests": len(self.requests),
+            "served": len(served),
+            "deadline_misses": self.deadline_misses,
+            "images": sum(t.images for t in served),
+            "batches": len(self.batches),
+            "padded_slots": sum(b.padded for b in self.batches),
+            "overlapped_batches": sum(1 for b in self.batches
+                                      if b.overlapped),
+            "latency_ms": self.latency_ms(),
+        }

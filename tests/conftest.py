@@ -1,5 +1,27 @@
+import os
+
 import numpy as np
 import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _hermetic_cache_dir(tmp_path_factory):
+    """Point the persisted plan/autotune caches at a per-session temp
+    dir so the suite is hermetic: entries left in ``~/.cache/repro`` by
+    earlier runs (or other code versions) can't leak into
+    cache-behaviour assertions like ``source == "graph_cache"``."""
+    d = tmp_path_factory.mktemp("repro_cache")
+    old = os.environ.get("REPRO_CACHE_DIR")
+    os.environ["REPRO_CACHE_DIR"] = str(d)
+    # drop anything already read from the old dir during collection
+    from repro.core import autotune, graph
+    autotune.clear_cache()
+    graph.clear_cache()
+    yield
+    if old is None:
+        os.environ.pop("REPRO_CACHE_DIR", None)
+    else:
+        os.environ["REPRO_CACHE_DIR"] = old
 
 
 @pytest.fixture

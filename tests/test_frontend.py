@@ -1,0 +1,337 @@
+"""Async serving front end (serve/frontend.py): continuous batching,
+deadline-aware admission, double-buffered dispatch, multi-resolution
+routing, and per-request telemetry."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import convspec as cs
+from repro.core import cuconv as cc
+from repro.models.cnn import SimpleCNN, resnet_like
+from repro.serve.frontend import (
+    DEADLINE_EXCEEDED, SERVED, AsyncServeFrontend, DeadlineExceeded,
+    ServeRequest)
+
+
+TINY = [(3, 3, 6, 2), (1, 1, 4, 1)]
+
+
+def _lax_model_ref(model, params, x):
+    y = x
+    for p, (kh, kw, co, s) in zip(params["convs"], model.spec):
+        y = jax.nn.relu(cc.conv_lax(y, p["w"], s, "same") + p["b"])
+    return y.mean(axis=(1, 2)) @ params["head"]
+
+
+class FakeClock:
+    """Deterministic injectable clock (seconds); advance in ms."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance_ms(self, ms: float) -> None:
+        self.t += ms / 1e3
+
+
+@pytest.fixture
+def tiny():
+    model = SimpleCNN(TINY, num_classes=3)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# correctness: multi-resolution serving
+
+def test_multi_resolution_mixed_stream_matches_reference(rng, tiny):
+    """One frontend, two image geometries: every submitted image is
+    served exactly once through its geometry's bucket set, outputs
+    matching the unbatched lax reference."""
+    model, params = tiny
+    fe = AsyncServeFrontend(model, params,
+                            {(16, 16, 3): (1, 4), (8, 8, 3): (1, 2)})
+    fe.warmup()
+    sizes = [(1, 16), (3, 8), (5, 16), (2, 8), (1, 8), (4, 16)]
+    reqs = [ServeRequest(rid=i, images=rng.normal(
+        size=(n, hw, hw, 3)).astype(np.float32))
+        for i, (n, hw) in enumerate(sizes)]
+    for r in reqs:
+        fe.submit(r)
+    cs.reset_plan_stats()
+    done = fe.run()
+    assert cs.PLAN_STATS["resolutions"] == 0    # warm frontend: no re-plans
+    assert sorted(r.rid for r in done) == list(range(len(sizes)))
+    assert all(r.status == SERVED and r.done for r in done)
+    st = fe.stats()
+    assert st["images"] == sum(n for n, _ in sizes)
+    assert set(st["geometries"]) == {"16x16x3", "8x8x3"}
+    for r in reqs:
+        assert r.out.shape == (r.images.shape[0], 3)
+        for i in range(r.images.shape[0]):
+            ref = _lax_model_ref(model, params,
+                                 jnp.asarray(r.images[i:i + 1]))
+            np.testing.assert_allclose(r.out[i], np.asarray(ref)[0],
+                                       rtol=3e-4, atol=3e-4,
+                                       err_msg=f"req {r.rid} image {i}")
+
+
+def test_rejects_unserved_geometry(rng, tiny):
+    model, params = tiny
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (1,)})
+    with pytest.raises(ValueError, match="matches no served geometry"):
+        fe.submit(ServeRequest(rid=0, images=rng.normal(
+            size=(1, 12, 12, 3)).astype(np.float32)))
+    with pytest.raises(ValueError, match="geometries"):
+        AsyncServeFrontend(model, params, {})
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware admission
+
+def test_expired_request_rejected_with_typed_result(rng, tiny):
+    """A request whose deadline passed before admission comes back
+    status=deadline_exceeded with a typed DeadlineExceeded error — not
+    silently served — and counts as a deadline miss."""
+    model, params = tiny
+    clock = FakeClock()
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (2,)}, clock=clock)
+    fe.warmup()
+    late = ServeRequest(rid=0, images=rng.normal(
+        size=(2, 8, 8, 3)).astype(np.float32), deadline_ms=10.0)
+    ok = ServeRequest(rid=1, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32), deadline_ms=10_000.0)
+    fe.submit(late)
+    fe.submit(ok)
+    clock.advance_ms(50.0)          # past late's deadline, within ok's
+    done = fe.run()
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].status == DEADLINE_EXCEEDED
+    assert isinstance(by_rid[0].error, DeadlineExceeded)
+    assert by_rid[0].error.rid == 0
+    assert by_rid[0].error.deadline_ms == pytest.approx(10.0)
+    assert by_rid[0].error.lateness_ms == pytest.approx(40.0)
+    assert by_rid[0].out is None and by_rid[0].done
+    assert by_rid[1].status == SERVED and by_rid[1].out is not None
+    st = fe.stats()
+    assert st["deadline_misses"] == 1
+    assert st["served"] == 1
+
+
+def test_default_deadline_applies_to_unmarked_requests(rng, tiny):
+    model, params = tiny
+    clock = FakeClock()
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (1,)},
+                            default_deadline_ms=20.0, clock=clock)
+    fe.warmup()
+    fe.submit(ServeRequest(rid=0, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32)))       # inherits 20ms SLO
+    fe.submit(ServeRequest(rid=1, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32), deadline_ms=500.0))
+    clock.advance_ms(100.0)
+    done = fe.run()
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].status == DEADLINE_EXCEEDED
+    assert by_rid[1].status == SERVED
+
+
+def test_admission_is_edf_within_a_bucket(rng, tiny):
+    """Earlier deadlines dispatch first regardless of submit order."""
+    model, params = tiny
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (1,)})
+    fe.warmup()
+    a = ServeRequest(rid=0, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32), deadline_ms=60_000.0)
+    b = ServeRequest(rid=1, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32), deadline_ms=1_000.0)
+    c = ServeRequest(rid=2, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32))        # no deadline: last
+    for r in (a, c, b):
+        fe.submit(r)
+    done = fe.run()
+    assert [r.rid for r in done] == [1, 0, 2]   # completion order == EDF
+
+
+def test_committed_request_completes_despite_late_deadline(rng, tiny):
+    """A request with units already in flight is never purged — it was
+    admitted on time and always completes (late_served accounts it)."""
+    model, params = tiny
+    clock = FakeClock()
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (2,)},
+                            pipeline_depth=2, clock=clock)
+    fe.warmup()
+    # 3 units: first batch of 2 dispatches, then the deadline passes
+    # before the tail unit is admitted
+    r = ServeRequest(rid=0, images=rng.normal(
+        size=(3, 8, 8, 3)).astype(np.float32), deadline_ms=10.0)
+    fe.submit(r)
+    fe.poll()                       # bucket-full: dispatches (r, 0..1)
+    clock.advance_ms(50.0)          # deadline passes mid-request
+    done = fe.run()
+    assert [x.rid for x in done] == [0]
+    assert done[0].status == SERVED
+    assert fe.stats()["deadline_misses"] == 0
+    assert fe.stats()["late_served"] == 1
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: the bucket-full-or-max-wait close policy
+
+def test_short_batch_waits_for_max_wait(rng, tiny):
+    model, params = tiny
+    clock = FakeClock()
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (4,)},
+                            max_wait_ms=10.0, clock=clock)
+    fe.warmup()
+    fe.submit(ServeRequest(rid=0, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32)))
+    assert fe.poll() == [] and fe.stats()["batches"] == 0   # still waiting
+    clock.advance_ms(5.0)
+    assert fe.poll() == [] and fe.stats()["batches"] == 0   # not yet
+    clock.advance_ms(6.0)                                   # 11ms > 10ms
+    fe.poll()
+    done = fe.flush()
+    assert [r.rid for r in done] == [0] and done[0].status == SERVED
+    st = fe.stats()
+    assert st["batches"] == 1
+    assert st["padded_slots"] == 3      # 1 unit rode the 4-bucket padded
+
+
+def test_full_bucket_dispatches_without_waiting(rng, tiny):
+    model, params = tiny
+    clock = FakeClock()
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (1, 4)},
+                            max_wait_ms=10_000.0, clock=clock)
+    fe.warmup()
+    fe.submit(ServeRequest(rid=0, images=rng.normal(
+        size=(4, 8, 8, 3)).astype(np.float32)))
+    fe.poll()                       # zero wall-clock has passed
+    done = fe.flush()
+    assert [r.rid for r in done] == [0]
+    assert fe.stats()["batches"] == 1
+    assert fe.stats()["padded_slots"] == 0
+
+
+# ---------------------------------------------------------------------------
+# double-buffered dispatch
+
+def test_steady_state_batches_overlap_transfer_with_compute(rng, tiny):
+    """With >= 2 batches the pipeline keeps one batch in flight while
+    the next is packed + transferred: every steady-state batch is
+    flagged overlapped, and the pipeline never exceeds its depth."""
+    model, params = tiny
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (2,)},
+                            pipeline_depth=2)
+    fe.warmup()
+    for i in range(5):
+        fe.submit(ServeRequest(rid=i, images=rng.normal(
+            size=(2, 8, 8, 3)).astype(np.float32)))
+    done = fe.run()
+    assert len(done) == 5
+    st = fe.stats()
+    assert st["batches"] == 5
+    # batch 0 has nothing to overlap; every later batch transferred
+    # while its predecessor was still in flight
+    assert st["overlapped_batches"] == 4
+    assert st["max_inflight"] == 2      # depth respected, and reached
+    assert st["inflight"] == 0
+    for prev, nxt in zip(fe.telemetry.batches, fe.telemetry.batches[1:]):
+        assert nxt.overlapped
+        assert nxt.transfer_t0 < prev.harvest_t   # the overlap window
+
+
+def test_pipeline_depth_one_never_overlaps(rng, tiny):
+    model, params = tiny
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (2,)},
+                            pipeline_depth=1)
+    fe.warmup()
+    for i in range(3):
+        fe.submit(ServeRequest(rid=i, images=rng.normal(
+            size=(2, 8, 8, 3)).astype(np.float32)))
+    fe.run()
+    st = fe.stats()
+    assert st["overlapped_batches"] == 0
+    assert st["max_inflight"] == 1
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+
+def test_stats_rollups_are_complete_and_json_ready(rng, tiny):
+    model, params = tiny
+    fe = AsyncServeFrontend(model, params,
+                            {(16, 16, 3): (1, 4), (8, 8, 3): (1, 2)})
+    fe.warmup()
+    for i, (n, hw) in enumerate([(2, 16), (1, 8), (3, 16), (2, 8)]):
+        fe.submit(ServeRequest(rid=i, images=rng.normal(
+            size=(n, hw, hw, 3)).astype(np.float32),
+            deadline_ms=60_000.0))
+    fe.run()
+    st = fe.stats()
+    json.dumps(st)                      # must be JSON-serializable
+    lat = st["latency_ms"]
+    assert set(lat) == {"queue", "transfer", "compute", "total"}
+    for stage, ps in lat.items():
+        assert set(ps) == {"p50", "p95", "p99"}
+        assert ps["p50"] <= ps["p95"] <= ps["p99"], stage
+        assert all(v >= 0.0 for v in ps.values()), stage
+    assert st["requests"] == st["served"] == 4
+    assert st["deadline_misses"] == 0
+    # per-request accounting: total covers queue+compute for every trace
+    for t in fe.telemetry.requests:
+        assert t.total_ms >= t.compute_ms
+        assert t.total_ms >= t.queue_ms
+
+
+def test_warmup_compiles_exactly_the_trace_that_serves(rng, tiny):
+    """Requests arriving in ANY host dtype are packed to the one
+    input_dtype() the warmup dummy compiled — serving triggers zero
+    retraces on the warm programs."""
+    model, params = tiny
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (1, 2)})
+    fe.warmup()
+    fe.submit(ServeRequest(rid=0, images=rng.normal(
+        size=(3, 8, 8, 3))))            # float64 host images
+    fe.submit(ServeRequest(rid=1, images=rng.normal(
+        size=(2, 8, 8, 3)).astype(np.float16)))
+    done = fe.run()
+    assert all(r.status == SERVED for r in done)
+    for b, fn in fe.programs[(8, 8, 3)]._fns.items():
+        assert fn._cache_size() == 1, f"bucket {b} retraced while serving"
+    for r in done:
+        for i in range(r.images.shape[0]):
+            ref = _lax_model_ref(model, params, jnp.asarray(
+                r.images[i:i + 1], jnp.float32))
+            np.testing.assert_allclose(r.out[i], np.asarray(ref)[0],
+                                       rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: an IR model at two resolutions through one frontend
+
+def test_acceptance_resnet_two_resolutions_zero_misses(rng):
+    from repro.configs.serve import SMOKE_FRONTEND
+    model = resnet_like(num_classes=4)
+    params = model.init(jax.random.PRNGKey(0))
+    fe = AsyncServeFrontend(
+        model, params, SMOKE_FRONTEND.geometry_map(),
+        max_wait_ms=SMOKE_FRONTEND.max_wait_ms,
+        default_deadline_ms=SMOKE_FRONTEND.default_deadline_ms,
+        pipeline_depth=SMOKE_FRONTEND.pipeline_depth)
+    fe.warmup()
+    for i, (n, hw) in enumerate([(1, 32), (2, 16), (4, 32), (1, 16),
+                                 (3, 32), (2, 16)]):
+        fe.submit(ServeRequest(rid=i, images=rng.normal(
+            size=(n, hw, hw, 3)).astype(np.float32),
+            deadline_ms=None if i % 2 else 30_000.0))
+    done = fe.run()
+    assert all(r.status == SERVED for r in done)
+    st = fe.stats()
+    assert st["deadline_misses"] == 0 and st["late_served"] == 0
+    assert st["served"] == 6
+    assert len(st["batches_by_program"]) >= 2   # both geometries dispatched
+    assert st["latency_ms"]["total"]["p99"] >= st["latency_ms"]["total"]["p50"]

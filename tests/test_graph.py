@@ -244,6 +244,48 @@ def test_serve_measured_warmup_rebuilds_programs(rng):
                                rtol=3e-4, atol=3e-4)
 
 
+def test_serve_retry_after_mid_drain_failure(rng):
+    """The retry contract run()'s comment promises, pinned: a bucket
+    program that raises mid-drain leaves engine.queue intact, and a
+    retried run() serves every image exactly once (outputs rewrite
+    idempotently)."""
+    model = SimpleCNN([(1, 1, 4, 1)], num_classes=3)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = CnnServeEngine(model, params, (8, 8, 3), buckets=(2,))
+    eng.warmup()
+    reqs = [ImageRequest(rid=i, images=rng.normal(
+        size=(n, 8, 8, 3)).astype(np.float32))
+        for i, n in enumerate([2, 3])]          # 5 units -> 3 batches
+    for r in reqs:
+        eng.submit(r)
+    real, calls = eng._fns[2], {"n": 0}
+
+    def boom(params, xb):
+        calls["n"] += 1
+        if calls["n"] == 2:                     # fail on the SECOND batch
+            raise RuntimeError("injected mid-drain failure")
+        return real(params, xb)
+
+    eng._fns[2] = boom
+    with pytest.raises(RuntimeError, match="mid-drain"):
+        eng.run()
+    assert eng.queue == reqs                    # nothing lost, FIFO order
+    assert not any(r.done for r in reqs)
+    eng._fns[2] = real                          # "transient" fault clears
+    done = eng.run()
+    assert eng.queue == [] and [r.rid for r in done] == [0, 1]
+    assert all(r.done for r in done)
+    assert eng.stats["requests"] == 2
+    for r in reqs:                              # exactly once: every row
+        assert r.out.shape == (r.images.shape[0], 3)
+        for i in range(r.images.shape[0]):
+            ref = _lax_model_ref(model, params,
+                                 jnp.asarray(r.images[i:i + 1]))
+            np.testing.assert_allclose(r.out[i], np.asarray(ref)[0],
+                                       rtol=3e-4, atol=3e-4,
+                                       err_msg=f"req {r.rid} image {i}")
+
+
 def test_serve_rejects_wrong_geometry(rng):
     model = SimpleCNN([(1, 1, 4, 1)], num_classes=3)
     params = model.init(jax.random.PRNGKey(0))
