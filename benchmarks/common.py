@@ -32,7 +32,7 @@ def csv_row(name: str, us: float, derived: str = "") -> str:
 
 
 def write_json(stem: str, records: List[Dict],
-               out_dir: Optional[str] = None) -> str:
+               out_dir: Optional[str] = None, merge: bool = False) -> str:
     """Persist machine-readable benchmark results as ``BENCH_<stem>.json``.
 
     ``records`` is a list of dicts (name, config, dtype, algorithm,
@@ -40,10 +40,20 @@ def write_json(stem: str, records: List[Dict],
     the backend so the perf trajectory can be tracked (and CI-archived)
     across PRs.  Returns the written path.  ``$REPRO_BENCH_DIR``
     overrides the output directory (default: CWD).
+
+    With ``merge=True`` an existing artifact's records are kept, minus
+    any whose ``name`` a new record replaces — so two benchmark modules
+    (e.g. graph_serve and loadgen) can contribute to ONE stem without
+    clobbering each other, in either run order.
     """
     out_dir = out_dir or os.environ.get("REPRO_BENCH_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{stem}.json")
+    if merge and os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f).get("records", [])
+        fresh = {r.get("name") for r in records}
+        records = [r for r in old if r.get("name") not in fresh] + records
     with open(path, "w") as f:
         json.dump({"schema": BENCH_SCHEMA,
                    "backend": jax.default_backend(),

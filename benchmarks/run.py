@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   paper_figures       paper Figures 5/6/7 (speedup vs best library conv)
   table345_breakdown  paper Tables 3/4/5 (per-kernel time split)
   graph_serve         graph-planned CNN programs + batch-bucketed serving
+  loadgen             open-loop Poisson curves + multi-device scaling sweep
   lm_substrate        framework-layer micro-benchmarks
 
 ``--full`` sweeps every distinct config (slow on 1 CPU core);
@@ -27,13 +28,15 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (graph_serve, lm_substrate, paper_figures,
-                            table1_inventory, table345_breakdown)
+    from benchmarks import (graph_serve, lm_substrate, loadgen,
+                            paper_figures, table1_inventory,
+                            table345_breakdown)
     mods = {
         "table1_inventory": table1_inventory,
         "paper_figures": paper_figures,
         "table345_breakdown": table345_breakdown,
         "graph_serve": graph_serve,
+        "loadgen": loadgen,
         "lm_substrate": lm_substrate,
     }
     names = args.only.split(",") if args.only else list(mods)

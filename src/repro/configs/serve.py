@@ -50,3 +50,20 @@ SMOKE_FRONTEND = FrontendConfig(
     default_deadline_ms=DEFAULT_SLO_MS,
     pipeline_depth=2,
 )
+
+
+#: the multi-device smoke deployment, shared by the CI
+#: multi-device-smoke step, benchmarks/loadgen.py's ``sharded_scaling``
+#: sweep, and tests/test_distributed_serve.py.  The model is the named
+#: ``models.cnn.tiny_cnn``.  Buckets here are PER-SHARD capacities — a
+#: ``ShardedServeDispatcher`` on an N-device mesh serves global buckets
+#: N× these — and each geometry carries a SINGLE bucket so every image
+#: flows through one per-shard batch-shape program, the precondition
+#: for bitwise-identical outputs across device counts.
+DIST_SMOKE = FrontendConfig(
+    geometries=(((8, 8, 3), (2,)),
+                ((12, 12, 3), (2,))),
+    max_wait_ms=2.0,
+    default_deadline_ms=DEFAULT_SLO_MS,
+    pipeline_depth=2,
+)

@@ -15,6 +15,12 @@ and `make_rules` maps logical names onto mesh axes per execution mode:
 Big matrices therefore get BOTH an FSDP and a TP axis, e.g.
 ``attn/wq/w -> P(None, 'data', 'model')`` — the 2-D sharding the
 dry-run's collective model assumes.
+
+The serving subsystem (serve/distributed.py) uses the data-parallel
+helpers at the bottom instead: CNN inference params are replicated
+wholesale (``replicate_params``) and request batches shard their
+leading axis (``batch_sharded``) over the 1-D serve mesh — no logical
+axes needed.
 """
 from __future__ import annotations
 
@@ -28,36 +34,31 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: F401
 # path -> logical axes for the trailing dims (first match wins)
 
 _AXIS_TABLE = [
-    # embeddings / head
+    # embeddings / head (lm_head has no bias in any current arch)
     (r"embed/embedding$",            ("vocab", "embed")),
     (r"lm_head/w$",                  ("embed", "vocab")),
-    (r"lm_head/b$",                  ("vocab",)),
     # any norm scale (ln1/ln2/q_norm/k_norm/kv_norm/final_norm/ssm norm)
     (r"scale$",                      ("null",)),
-    # attention (GQA + MLA)
+    # attention (GQA + MLA; only the qkv projections carry biases)
     (r"attn/w[qkv]/w$",              ("embed", "heads")),
     (r"attn/w[qkv]/b$",              ("heads",)),
     (r"attn/wo/w$",                  ("heads", "embed")),
-    (r"attn/wo/b$",                  ("embed",)),
     (r"attn/w_dkv/w$",               ("embed", "latent")),
     (r"attn/w_ukv/w$",               ("latent", "heads")),
     # MoE (experts bank leaves are raw (E, a, b) arrays)
     (r"router/w$",                   ("embed", "latent")),
     (r"experts/w[ig]$",              ("experts", "embed", "moe_ff")),
     (r"experts/wo$",                 ("experts", "moe_ff", "embed")),
-    # dense / shared-expert SwiGLU MLP
+    # dense / shared-expert SwiGLU MLP (bias-free in every current arch)
     (r"(mlp|shared)/w[ig]/w$",       ("embed", "ff")),
-    (r"(mlp|shared)/w[ig]/b$",       ("ff",)),
     (r"(mlp|shared)/wo/w$",          ("ff", "embed")),
-    (r"(mlp|shared)/wo/b$",          ("embed",)),
-    # mamba mixer
+    # mamba mixer (in-projections and out_proj are bias-free; the
+    # depthwise conv taps keep theirs)
     (r"ssm/w(z|x|B|C|dt)/w$",        ("embed", "inner")),
-    (r"ssm/w(z|x|B|C|dt)/b$",        ("inner",)),
     (r"ssm/conv_[xBC]/w$",           ("null", "inner")),
     (r"ssm/conv_[xBC]/b$",           ("inner",)),
     (r"ssm/(A_log|D|dt_bias)$",      ("null",)),
     (r"ssm/out_proj/w$",             ("inner", "embed")),
-    (r"ssm/out_proj/b$",             ("embed",)),
 ]
 _AXIS_TABLE = [(re.compile(pat), ax) for pat, ax in _AXIS_TABLE]
 
@@ -180,3 +181,47 @@ def named(mesh, tree) -> Any:
     """PartitionSpec tree -> NamedSharding tree on the given mesh."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                         is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# data-parallel serving (serve/distributed.py): CNN param trees carry no
+# logical axes — inference params are replicated wholesale and only the
+# batch axis of each request batch is cut over the serve mesh.
+
+def replicated(mesh) -> NamedSharding:
+    """Fully-replicated sharding on ``mesh`` (every leaf on every device)."""
+    return NamedSharding(mesh, P())
+
+
+def batch_sharded(mesh, ndim: int, axis: str = "data") -> NamedSharding:
+    """Leading (batch) dim sharded over ``axis``, all others replicated."""
+    if ndim < 1:
+        raise ValueError(f"batch_sharded needs rank >= 1; got {ndim}")
+    return NamedSharding(mesh, P(axis, *([None] * (ndim - 1))))
+
+
+def is_replicated_on(leaf, mesh) -> bool:
+    """True when ``leaf`` is already a device array fully replicated
+    across exactly ``mesh``'s devices (so ``device_put`` would be a
+    re-transfer, not a placement)."""
+    sh = getattr(leaf, "sharding", None)
+    if sh is None or not sh.is_fully_replicated:
+        return False
+    return set(getattr(leaf, "devices", lambda: ())()) == set(
+        mesh.devices.flat)
+
+
+def replicate_params(params, mesh):
+    """Replicate an inference param tree onto ``mesh`` ONCE.
+
+    Leaves already replicated on this mesh pass through untouched, so
+    layers sharing one param tree (a dispatcher handing the same tree
+    to several geometries' bucket programs) trigger exactly one
+    host→device transfer however many times this is called.  Everything
+    downstream passes the returned tree by reference; serving never
+    re-transfers it (``jax.transfer_guard("disallow")``-clean).
+    """
+    target = replicated(mesh)
+    return jax.tree.map(
+        lambda leaf: leaf if is_replicated_on(leaf, mesh)
+        else jax.device_put(leaf, target), params)

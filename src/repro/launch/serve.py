@@ -1,8 +1,11 @@
-"""Serving launcher: batched greedy decoding over the ServeEngine."""
+"""Serving launcher: batched greedy decoding over the ServeEngine,
+plus the process_index-disciplined multi-device CNN entry
+(``--cnn-dist``)."""
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -13,17 +16,76 @@ from repro.models import lm
 from repro.serve import Request, ServeEngine
 
 
+def cnn_dist_main(args) -> None:
+    """One ``ShardedServeDispatcher`` per host.
+
+    Every process derives the same geometry partition from the same
+    config (``owned_geometries``: sorted round-robin by
+    ``process_index``), so which host admits which image shape is
+    decided with no coordination — a request router needs only the
+    config and the ownership rule.  This process admits traffic ONLY
+    for the geometries it owns; on a single-process deployment that is
+    all of them.
+    """
+    from repro.configs.serve import DIST_SMOKE
+    from repro.models.cnn import tiny_cnn
+    from repro.serve import ServeRequest, ShardedServeDispatcher
+
+    model = tiny_cnn()
+    params = model.init(jax.random.PRNGKey(0))
+    disp = ShardedServeDispatcher(
+        model, params, DIST_SMOKE.geometry_map(),
+        process_index=args.process_index,
+        process_count=args.process_count,
+        max_wait_ms=DIST_SMOKE.max_wait_ms,
+        default_deadline_ms=DIST_SMOKE.default_deadline_ms,
+        pipeline_depth=DIST_SMOKE.pipeline_depth)
+    print(f"[serve-dist] process {disp.process_index}/"
+          f"{disp.process_count}, {disp.n_devices} device(s), owns "
+          f"{['x'.join(map(str, s)) for s in disp.geometries] or 'nothing'}")
+    if not disp.geometries:
+        return
+    disp.warmup()
+    rng = np.random.default_rng(disp.process_index)
+    t0 = time.perf_counter()
+    rid = 0
+    for _ in range(args.requests):
+        shape = disp.geometries[rid % len(disp.geometries)]
+        n = int(rng.integers(1, max(disp.global_buckets(shape)) + 1))
+        disp.submit(ServeRequest(
+            rid=rid, images=rng.standard_normal((n,) + shape,
+                                                dtype=np.float32)))
+        rid += 1
+    done = disp.run()
+    dt = time.perf_counter() - t0
+    images = sum(len(r.images) for r in done)
+    print(f"[serve-dist] {len(done)} requests, {images} images in "
+          f"{dt*1e3:.1f}ms ({images/dt:.0f} img/s post-warmup)")
+    print(json.dumps(disp.stats(), indent=2, default=str))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--cnn-dist", action="store_true",
+                    help="serve the DIST_SMOKE CNN deployment through "
+                         "one per-host ShardedServeDispatcher")
+    ap.add_argument("--arch", choices=list_archs())
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--process-index", type=int, default=None,
+                    help="override jax.process_index() (cnn-dist)")
+    ap.add_argument("--process-count", type=int, default=None,
+                    help="override jax.process_count() (cnn-dist)")
     args = ap.parse_args(argv)
 
+    if args.cnn_dist:
+        return cnn_dist_main(args)
+    if args.arch is None:
+        ap.error("--arch is required unless --cnn-dist is given")
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)

@@ -3,4 +3,6 @@ from repro.serve.cnn import (  # noqa: F401
     BucketPrograms, CnnServeEngine, ImageRequest)
 from repro.serve.frontend import (  # noqa: F401
     AsyncServeFrontend, DeadlineExceeded, ServeRequest)
+from repro.serve.distributed import (  # noqa: F401
+    ShardedServeDispatcher, owned_geometries)
 from repro.serve.telemetry import Telemetry  # noqa: F401

@@ -31,8 +31,9 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+
+from repro.dist import sharding as _sh
 
 
 @dataclasses.dataclass
@@ -91,7 +92,9 @@ def scatter_outputs(chunk: Sequence[Tuple[ImageRequest, int]],
     off = 0
     for r, i0, i1 in contiguous_blocks(chunk):
         if r.out is None:
-            r.out = np.zeros((r.images.shape[0], y.shape[-1]), y.dtype)
+            # empty, not zeros: every row is written exactly once (a
+            # dispatched request is committed — all its units serve)
+            r.out = np.empty((r.images.shape[0], y.shape[-1]), y.dtype)
         r.out[i0:i1] = y[off:off + (i1 - i0)]
         off += i1 - i0
 
@@ -109,23 +112,49 @@ class BucketPrograms:
     truth for the dtype requests are packed to AND the dtype
     ``warmup()``'s dummy compiles, so a warm program can never be asked
     to retrace at serve time because the two paths disagreed.
+
+    **Sharded mode** (``mesh=`` a 1-D ``('data',)`` mesh from
+    ``launch.mesh.make_serve_mesh``): the configured ``buckets`` become
+    PER-SHARD capacities and the served (global) buckets are
+    ``bucket * mesh_size`` — device-count-aware by construction, every
+    global bucket a multiple of the mesh size, padding accounted per
+    shard (``shard_units``).  Each program is the per-shard-geometry
+    ``GraphPlan`` — so tuned launch configs persisted in autotune.json
+    for that geometry are reused per shard unchanged — wrapped in
+    ``shard_map`` over the mesh and jitted with the batch axis sharded
+    and params replicated.  Because the per-shard body is traced at the
+    per-shard batch shape, outputs are bitwise-identical to the
+    single-device program at that bucket, whatever the device count.
     """
 
     def __init__(self, model, params, image_shape: Tuple[int, int, int], *,
                  buckets: Tuple[int, ...] = (1, 4, 8), algorithm="auto",
                  backend: Optional[str] = None, precision=None,
-                 fuse: bool = True, input_dtype=None):
-        self.model, self.params = model, params
+                 fuse: bool = True, input_dtype=None, mesh=None):
+        self.model = model
         self.image_shape = tuple(map(int, image_shape))     # (H, W, C)
-        self.buckets = tuple(sorted({int(b) for b in buckets}))
-        if not self.buckets or self.buckets[0] < 1:
+        self.mesh = mesh
+        self.n_shards = int(np.prod(mesh.devices.shape)) if mesh else 1
+        self.shard_buckets = tuple(sorted({int(b) for b in buckets}))
+        if not self.shard_buckets or self.shard_buckets[0] < 1:
             raise ValueError(f"buckets must be positive ints; got {buckets}")
+        # the buckets traffic is packed to: global batch sizes
+        self.buckets = tuple(b * self.n_shards for b in self.shard_buckets)
         self.algorithm = algorithm
         self.backend = backend or jax.default_backend()
         self.precision = precision
         self.fuse = fuse
         self._input_dtype = np.dtype(input_dtype or np.float32)
-        self._fns: Dict[int, Callable] = {}    # bucket -> jitted program
+        self._fns: Dict[int, Callable] = {}    # global bucket -> program
+        # built once: NamedSharding construction is ~0.1ms of pure
+        # Python, far too hot to repeat on every packed batch
+        self._in_sharding = (None if mesh is None
+                             else _sh.batch_sharded(mesh, ndim=4))
+        # replicate params once onto the mesh (a tree already replicated
+        # there — e.g. by a dispatcher shared across geometries — passes
+        # through without any transfer)
+        self.params = (params if mesh is None
+                       else _sh.replicate_params(params, mesh))
 
     # ------------------------------------------------------------------
     def input_dtype(self) -> np.dtype:
@@ -148,16 +177,69 @@ class BucketPrograms:
         fits = [b for b in self.buckets if b <= pending]
         return max(fits) if fits else self.buckets[0]
 
+    def input_sharding(self):
+        """How packed batches land on devices: batch axis sharded over
+        the mesh, or None (default placement) unsharded — the value
+        ``put()`` and the dispatch paths hand to ``jax.device_put``."""
+        return self._in_sharding
+
+    def put(self, xb: np.ndarray):
+        """Explicitly place one packed batch (host → device(s)).  The
+        serving layers only ever move inputs through here, so a
+        ``jax.transfer_guard("disallow")`` around a warm serve loop
+        proves params are never re-transferred."""
+        return jax.device_put(xb, self.input_sharding())
+
+    def shard_units(self, real: int, b: int) -> Optional[List[int]]:
+        """Real (non-padded) images per mesh device for a batch of
+        ``real`` units packed to global bucket ``b`` — shards take
+        contiguous row slices, so padding concentrates in the trailing
+        devices.  None when unsharded."""
+        if self.mesh is None:
+            return None
+        per = b // self.n_shards
+        return [max(0, min(per, real - i * per))
+                for i in range(self.n_shards)]
+
+    def _shard_plan(self, b: int):
+        """The per-shard GraphPlan for global bucket ``b`` — the SAME
+        plan (and tuned autotune.json launch configs) a single-device
+        engine resolves for that per-shard batch geometry."""
+        bs = b // self.n_shards
+        return self.model.graph_plan(
+            (bs,) + self.image_shape, backend=self.backend,
+            force=None if self.algorithm == "auto" else self.algorithm,
+            precision=self.precision, fuse=self.fuse)
+
     def fn(self, b: int) -> Callable:
-        """The jitted program for bucket ``b`` (built on first use)."""
+        """The jitted program for global bucket ``b`` (built on first
+        use).  Sharded mode wraps the per-shard program in ``shard_map``
+        over the mesh: params replicated, batch axis split, outputs
+        row-sharded — and the per-shard body traced at exactly the
+        per-shard batch shape (bitwise parity with the single-device
+        program)."""
         f = self._fns.get(b)
         if f is None:
-            gp = self.model.graph_plan(
-                (b,) + self.image_shape, backend=self.backend,
-                force=None if self.algorithm == "auto" else self.algorithm,
-                precision=self.precision, fuse=self.fuse)
-            f = jax.jit(lambda params, xb: self.model.apply(
-                params, xb, graph_plan=gp))
+            gp = self._shard_plan(b)
+            if self.mesh is None:
+                f = jax.jit(lambda params, xb: self.model.apply(
+                    params, xb, graph_plan=gp))
+            else:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+                body = shard_map(
+                    lambda params, xb: self.model.apply(
+                        params, xb, graph_plan=gp),
+                    mesh=self.mesh,
+                    in_specs=(P(), P("data", None, None, None)),
+                    out_specs=P("data"))
+                # out sharding names only the leading (batch) dim so
+                # any output rank stays row-sharded
+                f = jax.jit(
+                    body,
+                    in_shardings=(_sh.replicated(self.mesh),
+                                  self.input_sharding()),
+                    out_shardings=_sh.batch_sharded(self.mesh, ndim=1))
             self._fns[b] = f
         return f
 
@@ -178,7 +260,9 @@ class BucketPrograms:
         ``measure=True`` is the back-compat spelling of ``tune="algo"``.
         The compile dummy is ``input_dtype()`` — exactly the dtype the
         packers feed — so warmup compiles exactly the trace that serves.
-        Returns per-bucket compile milliseconds.
+        Sharded mode tunes the PER-SHARD geometry (that is what each
+        device executes) and places the dummy with the batch sharding.
+        Returns per-bucket compile milliseconds keyed by global bucket.
         """
         if measure and tune is None:
             tune = "algo"
@@ -186,7 +270,8 @@ class BucketPrograms:
         out = {}
         for b in self.buckets:
             if tune is not None and self.algorithm == "auto":
-                self.model.graph_plan((b, H, W, C), backend=self.backend,
+                bs = b // self.n_shards
+                self.model.graph_plan((bs, H, W, C), backend=self.backend,
                                       precision=self.precision,
                                       fuse=self.fuse) \
                     .warmup(tune=tune)
@@ -195,7 +280,7 @@ class BucketPrograms:
                 # trace, so force a rebuild
                 self._fns.pop(b, None)
             f = self.fn(b)
-            x = jnp.zeros((b, H, W, C), jnp.dtype(self.input_dtype()))
+            x = self.put(np.zeros((b, H, W, C), self.input_dtype()))
             t0 = time.perf_counter()
             f(self.params, x).block_until_ready()
             out[b] = (time.perf_counter() - t0) * 1e3
@@ -211,16 +296,18 @@ class CnnServeEngine:
     def __init__(self, model, params, image_shape: Tuple[int, int, int], *,
                  buckets: Tuple[int, ...] = (1, 4, 8), algorithm="auto",
                  backend: Optional[str] = None, precision=None,
-                 fuse: bool = True, input_dtype=None):
+                 fuse: bool = True, input_dtype=None, mesh=None):
         # graph-wide PrecisionPolicy (e.g. "bf16") for every bucket
         # program; None defers to the model's own policy / fp32 inputs.
         # Master params stay fp32 — conv nodes cast per their specs, so
         # the same engine params serve any policy.  fuse=False serves
         # every bucket's unfused program (mirrors plan_graph's hatch).
+        # mesh= shards every bucket program data-parallel (see
+        # BucketPrograms; serve/distributed.py for the scheduler story).
         self.programs = BucketPrograms(
             model, params, image_shape, buckets=buckets,
             algorithm=algorithm, backend=backend, precision=precision,
-            fuse=fuse, input_dtype=input_dtype)
+            fuse=fuse, input_dtype=input_dtype, mesh=mesh)
         self.queue: List[ImageRequest] = []
         self.stats = {"requests": 0, "images": 0, "padded_slots": 0,
                       "batches": {b: 0 for b in self.programs.buckets}}
@@ -291,7 +378,7 @@ class CnnServeEngine:
             chunk = units[cursor:cursor + b]
             xb = self.programs.pack(chunk, b)
             y = np.asarray(self.programs.fn(b)(self.params,
-                                               jnp.asarray(xb)))
+                                               self.programs.put(xb)))
             scatter_outputs(chunk, y)
             self.stats["batches"][b] += 1
             self.stats["padded_slots"] += b - len(chunk)

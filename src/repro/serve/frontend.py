@@ -32,9 +32,21 @@ scheduler in front of them:
   N's in-flight compute — every such batch is flagged ``overlapped`` in
   telemetry, the signal the CI smoke test asserts on.
 
+* **SLO-aware bucket choice.**  When the tightest pending deadline has
+  less slack than the close policy's remaining wait (plus
+  ``slo_close_margin_ms`` headroom), the batch closes immediately into
+  the best-fitting — possibly padded, smaller — bucket instead of
+  waiting for a larger one to fill (``stats()["slo_closes"]``).
+
 * **Multi-resolution serving.**  One frontend owns several
   ``(image_shape, buckets)`` programs and routes each request to its
   geometry's bucket set — the one-shape-per-engine restriction is gone.
+
+* **Sharded programs.**  ``mesh=`` (see serve/distributed.py) shards
+  every bucket program's batch axis over a 1-D device mesh: configured
+  buckets become per-shard capacities, params replicate once, and
+  per-batch ``shard_units`` telemetry feeds the per-device
+  utilization/imbalance rollups.
 
 * **Telemetry.**  Every request leaves queue/transfer/compute/total
   latency (serve/telemetry.py); ``stats()`` exposes p50/p95/p99
@@ -132,9 +144,10 @@ class AsyncServeFrontend:
                                      Tuple[int, ...]], *,
                  max_wait_ms: float = 2.0,
                  default_deadline_ms: Optional[float] = None,
+                 slo_close_margin_ms: float = 0.0,
                  pipeline_depth: int = 2, algorithm="auto",
                  backend: Optional[str] = None, precision=None,
-                 fuse: bool = True, input_dtype=None,
+                 fuse: bool = True, input_dtype=None, mesh=None,
                  clock: Callable[[], float] = time.perf_counter):
         if not geometries:
             raise ValueError("geometries must map at least one "
@@ -142,16 +155,22 @@ class AsyncServeFrontend:
         if pipeline_depth < 1:
             raise ValueError(f"pipeline_depth must be >= 1; "
                              f"got {pipeline_depth}")
+        # mesh= shards every geometry's bucket programs data-parallel
+        # over a 1-D serve mesh: configured buckets become per-shard
+        # capacities, params replicate once (see BucketPrograms /
+        # serve/distributed.py)
         self.programs: Dict[Tuple[int, int, int], BucketPrograms] = {}
         for shape, buckets in dict(geometries).items():
             shape = tuple(map(int, shape))
             self.programs[shape] = BucketPrograms(
                 model, params, shape, buckets=buckets,
                 algorithm=algorithm, backend=backend, precision=precision,
-                fuse=fuse, input_dtype=input_dtype)
+                fuse=fuse, input_dtype=input_dtype, mesh=mesh)
         self.model, self.params = model, params
+        self.mesh = mesh
         self.max_wait_ms = float(max_wait_ms)
         self.default_deadline_ms = default_deadline_ms
+        self.slo_close_margin_ms = float(slo_close_margin_ms)
         self.pipeline_depth = int(pipeline_depth)
         self.telemetry = Telemetry()
         self._clock = clock
@@ -162,6 +181,7 @@ class AsyncServeFrontend:
         self._completed: List[ServeRequest] = []
         self._seq = 0
         self._max_inflight = 0
+        self._slo_closes = 0
         self._batch_counts: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
@@ -230,7 +250,15 @@ class AsyncServeFrontend:
         """EDF-order the geometry's pending units and close a batch if
         the policy allows: largest bucket full → dispatch now; else
         dispatch the best-fitting bucket once the oldest pending request
-        has waited ``max_wait_ms`` (or unconditionally when draining)."""
+        has waited ``max_wait_ms`` (or unconditionally when draining).
+
+        **SLO-aware close**: when the tightest pending deadline has less
+        slack than the wait the close policy would still impose (plus
+        ``slo_close_margin_ms`` of service headroom), the batch closes
+        NOW into the best-fitting — possibly padded, smaller — bucket
+        instead of waiting for a larger one to fill.  A lone
+        tight-deadline request is served padded rather than expiring in
+        the queue it was asked to wait in."""
         self._purge_expired(shape, now)
         pend = self._pending[shape]
         if not pend:
@@ -243,7 +271,15 @@ class AsyncServeFrontend:
         if len(pend) < bmax:
             oldest_wait_ms = (now - min(r._submit_t for r, _ in pend)) * 1e3
             if not force and oldest_wait_ms < self.max_wait_ms:
-                return None
+                remaining_wait_ms = self.max_wait_ms - oldest_wait_ms
+                slacks = [(r._deadline_t - now) * 1e3 for r, _ in pend
+                          if r._deadline_t is not None]
+                tight = min(slacks) if slacks else None
+                if (tight is None
+                        or tight > remaining_wait_ms
+                        + self.slo_close_margin_ms):
+                    return None
+                self._slo_closes += 1
         b = progs.pick_bucket(len(pend))
         chunk, self._pending[shape] = pend[:b], pend[b:]
         return chunk, b
@@ -252,18 +288,21 @@ class AsyncServeFrontend:
         progs = self.programs[shape]
         xb = progs.pack(chunk, bucket)
         # transfer: host blocks only on the COPY — any in-flight batch
-        # keeps computing on the device meanwhile (the overlap)
+        # keeps computing on the device meanwhile (the overlap).  The
+        # put is explicit (and sharded under a mesh); params ride the
+        # program's own once-replicated tree, never re-transferred.
         overlapped = bool(self._inflight)
         t0 = self._clock()
-        xd = jax.device_put(xb)
+        xd = progs.put(xb)
         jax.block_until_ready(xd)
         t1 = self._clock()
-        y = progs.fn(bucket)(self.params, xd)   # async dispatch: no block
+        y = progs.fn(bucket)(progs.params, xd)  # async dispatch: no block
         td = self._clock()
         trace = BatchTrace(
             geometry=_geom(shape), bucket=bucket, units=len(chunk),
             padded=bucket - len(chunk), transfer_t0=t0, transfer_t1=t1,
-            dispatch_t=td, overlapped=overlapped)
+            dispatch_t=td, overlapped=overlapped,
+            shard_units=progs.shard_units(len(chunk), bucket))
         for r, _ in chunk:
             if r._first_dispatch_t is None:
                 r._first_dispatch_t = t0
@@ -274,7 +313,10 @@ class AsyncServeFrontend:
 
     def _harvest_one(self) -> None:
         fl = self._inflight.popleft()
-        y = np.asarray(jax.block_until_ready(fl.result))
+        # device_get is an EXPLICIT device->host gather (sharded outputs
+        # reassemble across the mesh), keeping a warm serve loop clean
+        # under jax.transfer_guard("disallow")
+        y = np.asarray(jax.device_get(jax.block_until_ready(fl.result)))
         now = self._clock()
         fl.trace.harvest_t = now
         self.telemetry.record_batch(fl.trace)
@@ -366,6 +408,9 @@ class AsyncServeFrontend:
             "pending": self.pending_counts(),
             "inflight": len(self._inflight),
             "max_inflight": self._max_inflight,
+            # batches closed early because a pending deadline was
+            # tighter than the remaining close-policy wait
+            "slo_closes": self._slo_closes,
             # served past their deadline (admitted on time, finished
             # late) — distinct from admission-rejected deadline_misses
             "late_served": sum(

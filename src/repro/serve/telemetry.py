@@ -77,7 +77,10 @@ class BatchTrace:
     frontend's clock).  ``overlapped`` is True when this batch's
     host→device transfer started while a previous batch was still in
     flight on the device — the double-buffering overlap signal the CI
-    smoke test asserts on."""
+    smoke test asserts on.  ``shard_units`` (sharded serving only) is
+    how many REAL images landed on each mesh device — batch padding
+    concentrates in the trailing shards, so ``max - min`` per batch is
+    the shard-imbalance signal ``rollup()`` counts."""
     geometry: str
     bucket: int
     units: int                          # real (non-padded) images
@@ -87,6 +90,7 @@ class BatchTrace:
     dispatch_t: float
     harvest_t: float = 0.0
     overlapped: bool = False
+    shard_units: Optional[Sequence[int]] = None    # per-device real images
 
     @property
     def transfer_ms(self) -> float:
@@ -123,10 +127,43 @@ class Telemetry:
                                            for t in served])
                 for stage in STAGES}
 
+    def shard_rollup(self) -> Optional[Dict]:
+        """Per-device utilization + imbalance over the sharded batches.
+
+        ``per_device_units`` counts real images landed per mesh device;
+        ``per_device_utilization`` divides by that device's offered
+        slots (its share of every dispatched bucket).  A batch is
+        ``imbalanced`` when its real units don't divide evenly across
+        the shards (padding rode the trailing devices); the max
+        per-batch spread is reported so a pathological router shows up
+        as a number, not a feeling.  None when nothing sharded ran.
+        """
+        sb = [b for b in self.batches if b.shard_units is not None]
+        if not sb:
+            return None
+        n = max(len(b.shard_units) for b in sb)
+        units = [0] * n
+        slots = [0] * n
+        for b in sb:
+            per = b.bucket // len(b.shard_units)
+            for i, u in enumerate(b.shard_units):
+                units[i] += int(u)
+                slots[i] += per
+        spreads = [max(b.shard_units) - min(b.shard_units) for b in sb]
+        return {
+            "devices": n,
+            "per_device_units": units,
+            "per_device_utilization": [
+                u / s if s else 0.0 for u, s in zip(units, slots)],
+            "sharded_batches": len(sb),
+            "imbalanced_batches": sum(1 for s in spreads if s > 0),
+            "max_shard_imbalance": max(spreads),
+        }
+
     def rollup(self) -> Dict:
         """The JSON-ready summary ``frontend.stats()`` builds on."""
         served = [t for t in self.requests if t.status == "served"]
-        return {
+        out = {
             "requests": len(self.requests),
             "served": len(served),
             "deadline_misses": self.deadline_misses,
@@ -137,3 +174,7 @@ class Telemetry:
                                       if b.overlapped),
             "latency_ms": self.latency_ms(),
         }
+        shard = self.shard_rollup()
+        if shard is not None:
+            out["sharding"] = shard
+        return out

@@ -1,0 +1,155 @@
+"""Multi-device sharded serving (serve/distributed.py).
+
+The device-count matrix runs in subprocesses (forced host-platform
+device counts must be set before jax initialises) and checks the
+subsystem's three load-bearing properties: sharded results are
+BITWISE-identical to the single-device engine, every request is served
+exactly once, and params are replicated once — a warm serve round runs
+clean under ``jax.transfer_guard("disallow")``.  The in-process tests
+cover the deterministic per-host ownership rule.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.serve.distributed import owned_geometries
+
+GEOMS = {(8, 8, 3): (2,), (12, 12, 3): (2,), (16, 16, 3): (1, 4)}
+
+
+# ---------------------------------------------------------------------------
+# deterministic per-host geometry ownership
+
+def test_owned_geometries_partition_is_total_and_deterministic():
+    """Across any process count: every geometry has exactly one owner,
+    the union covers the whole table, and each process derives the same
+    answer from the same config (no coordination)."""
+    for pc in (1, 2, 3, 5):
+        parts = [owned_geometries(GEOMS, i, pc) for i in range(pc)]
+        combined = {}
+        for p in parts:
+            for shape, buckets in p.items():
+                assert shape not in combined       # exactly one owner
+                combined[shape] = buckets
+        assert combined == {s: tuple(b) for s, b in GEOMS.items()}
+        assert parts == [owned_geometries(GEOMS, i, pc) for i in range(pc)]
+    # more hosts than geometries: the extras own nothing and idle
+    assert owned_geometries(GEOMS, 4, 5) == {}
+    with pytest.raises(ValueError, match="process_index"):
+        owned_geometries(GEOMS, 3, 3)
+
+
+def test_dispatcher_owns_its_slice_and_rejects_the_rest():
+    import jax
+
+    from repro.models.cnn import tiny_cnn
+    from repro.serve import ServeRequest, ShardedServeDispatcher
+
+    model = tiny_cnn()
+    params = model.init(jax.random.PRNGKey(0))
+    disp = ShardedServeDispatcher(model, params, GEOMS,
+                                  process_index=0, process_count=2)
+    assert disp.owned == owned_geometries(GEOMS, 0, 2)
+    unowned = next(s for s in GEOMS if s not in disp.owned)
+    with pytest.raises(ValueError, match="not owned by process 0/2"):
+        disp.submit(ServeRequest(rid=0, images=np.zeros(
+            (1,) + unowned, np.float32)))
+    # an owner-less process idles: no frontend, empty serving surface
+    idle = ShardedServeDispatcher(model, params, {(8, 8, 3): (2,)},
+                                  process_index=1, process_count=2)
+    assert idle.geometries == () and idle.frontend is None
+    assert idle.poll() == [] and idle.run() == [] and idle.warmup() == {}
+    st = idle.stats()
+    assert st["requests"] == 0 and st["process_index"] == 1
+    assert len(st["partitions"]) == idle.n_devices
+
+
+# ---------------------------------------------------------------------------
+# the device-count matrix (subprocess per forced device count)
+
+_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import hashlib, json
+import jax, numpy as np
+from repro.configs.serve import DIST_SMOKE
+from repro.models.cnn import tiny_cnn
+from repro.serve import (CnnServeEngine, ImageRequest, ServeRequest,
+                         ShardedServeDispatcher)
+
+shape = (8, 8, 3)
+buckets = DIST_SMOKE.geometry_map()[shape]
+model = tiny_cnn()
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(7)
+sizes = [1, 2, 3, 2] * 6                      # 24 requests, 48 images
+imgs = [rng.standard_normal((k,) + shape).astype(np.float32)
+        for k in sizes]
+
+disp = ShardedServeDispatcher(model, params, {{shape: buckets}},
+                              process_index=0, process_count=1)
+assert disp.n_devices == {n}
+# device-count-aware buckets: global = per-shard x mesh size
+assert disp.global_buckets(shape) == tuple(b * {n} for b in buckets)
+disp.warmup()
+for i, x in enumerate(imgs):                  # warm serving round
+    disp.submit(ServeRequest(rid=1000 + i, images=x))
+disp.run()
+
+# replicated-once params: a WARM round makes no implicit transfer —
+# inputs move via explicit put, outputs via explicit device_get, and
+# the replicated param tree is reused by reference
+with jax.transfer_guard("disallow"):
+    for i, x in enumerate(imgs):
+        disp.submit(ServeRequest(rid=i, images=x))
+    done = disp.run()
+
+done.sort(key=lambda r: r.rid)
+assert [r.rid for r in done] == list(range(len(imgs)))   # exactly once
+assert all(r.status == "served" for r in done)
+assert all(r.out.shape == (x.shape[0], 3)
+           for r, x in zip(done, imgs))
+digest = hashlib.sha1(
+    np.concatenate([r.out for r in done]).tobytes()).hexdigest()
+
+st = disp.stats()
+assert len(st["partitions"]) == {n}
+shard = st["sharding"]
+assert shard["devices"] == {n}
+assert sum(shard["per_device_units"]) == 2 * sum(sizes)  # warm + guarded
+
+# the single-device reference: synchronous unsharded engine, same
+# params, same images, same (per-shard) buckets
+eng = CnnServeEngine(model, params, shape, buckets=buckets)
+for i, x in enumerate(imgs):
+    eng.submit(ImageRequest(rid=i, images=x))
+ref = sorted(eng.run(), key=lambda r: r.rid)
+ref_digest = hashlib.sha1(
+    np.concatenate([r.out for r in ref]).tobytes()).hexdigest()
+print("DIST_OK", json.dumps({{"digest": digest, "ref": ref_digest}}))
+"""
+
+
+def test_device_count_matrix_bitwise_identical_and_exactly_once():
+    """{1, 2, 4} forced host devices: every count serves the same
+    request set exactly once, bitwise-identical to the single-device
+    engine — and identical ACROSS device counts."""
+    digests = set()
+    for n in (1, 2, 4):
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run(
+            [sys.executable, "-c", _WORKER.format(n=n)], cwd=Path.cwd(),
+            env=env, capture_output=True, text=True, timeout=560)
+        assert "DIST_OK" in out.stdout, (
+            f"devices={n}:\n{out.stderr[-3000:]}")
+        payload = json.loads(out.stdout.split("DIST_OK", 1)[1])
+        assert payload["digest"] == payload["ref"], (
+            f"devices={n}: sharded outputs differ from the "
+            f"single-device engine")
+        digests.add(payload["digest"])
+    assert len(digests) == 1, f"digest drift across device counts: {digests}"

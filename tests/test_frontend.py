@@ -216,6 +216,69 @@ def test_full_bucket_dispatches_without_waiting(rng, tiny):
     assert fe.stats()["padded_slots"] == 0
 
 
+def test_tight_deadline_closes_batch_before_max_wait(rng, tiny):
+    """SLO-aware close: a pending deadline with less slack than the
+    remaining close-policy wait dispatches NOW — padded into the
+    bucket — instead of expiring in the queue it was told to wait in."""
+    model, params = tiny
+    clock = FakeClock()
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (4,)},
+                            max_wait_ms=10.0, clock=clock)
+    fe.warmup()
+    fe.submit(ServeRequest(rid=0, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32), deadline_ms=3.0))
+    fe.poll()                       # slack 3ms < 10ms remaining wait
+    done = fe.flush()
+    assert [r.rid for r in done] == [0] and done[0].status == SERVED
+    st = fe.stats()
+    assert st["slo_closes"] == 1
+    assert st["batches"] == 1 and st["padded_slots"] == 3
+    assert st["deadline_misses"] == 0 and st["late_served"] == 0
+
+
+def test_loose_deadline_still_waits_for_max_wait(rng, tiny):
+    """A deadline with plenty of slack does NOT trigger the SLO close —
+    the short batch keeps its max_wait patience for more traffic."""
+    model, params = tiny
+    clock = FakeClock()
+    fe = AsyncServeFrontend(model, params, {(8, 8, 3): (4,)},
+                            max_wait_ms=10.0, clock=clock)
+    fe.warmup()
+    fe.submit(ServeRequest(rid=0, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32), deadline_ms=50.0))
+    assert fe.poll() == [] and fe.stats()["batches"] == 0
+    clock.advance_ms(4.0)           # slack 46ms > 6ms remaining: wait on
+    assert fe.poll() == [] and fe.stats()["batches"] == 0
+    clock.advance_ms(7.0)           # 11ms > max_wait: the NORMAL close
+    fe.poll()
+    done = fe.flush()
+    assert [r.rid for r in done] == [0] and done[0].status == SERVED
+    assert fe.stats()["slo_closes"] == 0
+
+
+def test_slo_close_margin_adds_service_headroom(rng, tiny):
+    """slo_close_margin_ms widens what counts as 'tight': a 12ms
+    deadline against 10ms of remaining wait is loose at margin 0 but
+    tight at margin 5 (12 <= 10 + 5)."""
+    model, params = tiny
+    clock = FakeClock()
+    fe0 = AsyncServeFrontend(model, params, {(8, 8, 3): (4,)},
+                             max_wait_ms=10.0, clock=clock)
+    fe0.submit(ServeRequest(rid=0, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32), deadline_ms=12.0))
+    assert fe0.poll() == [] and fe0.stats()["slo_closes"] == 0
+    fe5 = AsyncServeFrontend(model, params, {(8, 8, 3): (4,)},
+                             max_wait_ms=10.0, slo_close_margin_ms=5.0,
+                             clock=clock)
+    fe5.warmup()
+    fe5.submit(ServeRequest(rid=0, images=rng.normal(
+        size=(1, 8, 8, 3)).astype(np.float32), deadline_ms=12.0))
+    fe5.poll()
+    done = fe5.flush()
+    assert [r.rid for r in done] == [0] and done[0].status == SERVED
+    assert fe5.stats()["slo_closes"] == 1
+
+
 # ---------------------------------------------------------------------------
 # double-buffered dispatch
 

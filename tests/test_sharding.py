@@ -26,6 +26,30 @@ def test_every_param_has_a_rule():
         assert n_leaves == n_axes, arch
 
 
+def test_no_dead_rules():
+    """Every _AXIS_TABLE pattern is the FIRST match for at least one
+    real param path across the current architectures.  First-match-wins
+    means a rule shadowed by an earlier one (or matching a param no
+    arch produces anymore) is dead code — this is the test that forces
+    pruning it when a param tree changes."""
+    from repro.configs.base import list_archs
+    first_matches = set()
+    for arch in list_archs():
+        cfg = smoke_variant(get_config(arch))
+        shapes = jax.eval_shape(lambda c=cfg: lm.init_lm(
+            c, jax.random.PRNGKey(0)))
+        flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+        for path, _leaf in flat:
+            p = sh._path_str(path)
+            for i, (pat, _ax) in enumerate(sh._AXIS_TABLE):
+                if pat.search(p):
+                    first_matches.add(i)
+                    break
+    dead = [sh._AXIS_TABLE[i][0].pattern
+            for i in range(len(sh._AXIS_TABLE)) if i not in first_matches]
+    assert not dead, f"dead sharding rules (no param path hits them): {dead}"
+
+
 def test_param_specs_2d_sharded():
     """Big matrices get both an FSDP ('data') and a TP ('model') axis."""
     cfg = smoke_variant(get_config("qwen2-72b"))
@@ -114,6 +138,36 @@ print("SPMD_OK", float(m["loss"]))
                          env=env, capture_output=True, text=True,
                          timeout=560)
     assert "SPMD_OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_serve_helpers_replicate_once_and_batch_shard():
+    """The data-parallel serving helpers the sharded dispatcher is
+    built on: replicate_params moves a host tree exactly once (already
+    replicated leaves pass through by identity), batch_sharded cuts
+    only the leading axis."""
+    import numpy as np
+
+    from repro.launch.mesh import SERVE_AXIS, make_serve_mesh
+
+    mesh = make_serve_mesh()
+    params = {"w": np.ones((4, 3), np.float32),
+              "inner": {"b": np.zeros((3,), np.float32)}}
+    rep = sh.replicate_params(params, mesh)
+    leaves = jax.tree.leaves(rep)
+    assert all(sh.is_replicated_on(leaf, mesh) for leaf in leaves)
+    assert not sh.is_replicated_on(params["w"], mesh)   # host array isn't
+    # second replication is the identity — no re-transfer
+    rep2 = sh.replicate_params(rep, mesh)
+    assert all(a is b for a, b in zip(leaves, jax.tree.leaves(rep2)))
+
+    assert sh.replicated(mesh).spec == sh.P()
+    assert sh.batch_sharded(mesh, 4).spec == sh.P(
+        SERVE_AXIS, None, None, None)
+    assert sh.batch_sharded(mesh, 1).spec == sh.P(SERVE_AXIS)
+    with pytest.raises(ValueError, match="rank"):
+        sh.batch_sharded(mesh, 0)
+    with pytest.raises(ValueError, match="n_devices"):
+        make_serve_mesh(len(jax.local_devices()) + 1)
 
 
 def test_collective_bytes_parser():
