@@ -38,6 +38,7 @@ import numpy as np
 from benchmarks.common import csv_row, time_fn, write_json
 from repro.configs.serve import SMOKE_FRONTEND
 from repro.models.cnn import mobilenet_like, resnet_like, squeezenet_like
+from repro.quant import Calibrator, QuantPolicy, accuracy_report
 from repro.serve.cnn import CnnServeEngine, ImageRequest
 from repro.serve.frontend import AsyncServeFrontend, ServeRequest
 
@@ -104,13 +105,17 @@ def run(quick=True):
                     "padded_slots": eng.stats["padded_slots"]})
 
     # IR models: residual / pool / depthwise forward passes as ONE
-    # program, under both the fp32 default and the bf16 precision policy
+    # program, under the fp32 default, the bf16 precision policy, and
+    # the calibrated int8 QuantPolicy (fp first/last, int8 inside)
     for mk in ((resnet_like,) if quick else (resnet_like, mobilenet_like)):
         m = mk()
         p = m.init(jax.random.PRNGKey(0))
-        for precision in (None, "bf16"):
+        xc = np.asarray(rng.normal(size=(4, HW, HW, C)), np.float32)
+        m.graph_plan(xc.shape).warmup(calibrate=Calibrator(xc, p))
+        for precision in (None, "bf16", QuantPolicy()):
             gp = m.graph_plan((1, HW, HW, C), precision=precision)
-            dtype = gp.graph.conv_nodes[0].spec.dtype
+            dtype = "+".join(sorted({n.spec.dtype
+                                     for n in gp.graph.conv_nodes}))
             stats = gp.warmup()
             algos = ",".join(sorted({r["algorithm"]
                                      for r in stats["nodes"]}))
@@ -127,11 +132,21 @@ def run(quick=True):
                 f"graph/{m.name}_steady_b1_{dtype}", us,
                 f"dtype={dtype} whole-network program "
                 f"(pool/add/head inside)"))
-            records.append({"name": f"graph/{m.name}_steady_b1_{dtype}",
-                            "config": f"{m.name} b1 {HW}x{HW}x{C}",
-                            "dtype": dtype, "us": us,
-                            "fused": dict(gp.fused),
-                            "plans": _plan_record(gp)})
+            record = {"name": f"graph/{m.name}_steady_b1_{dtype}",
+                      "config": f"{m.name} b1 {HW}x{HW}x{C}",
+                      "dtype": dtype, "us": us,
+                      "fused": dict(gp.fused),
+                      "plans": _plan_record(gp)}
+            if isinstance(precision, QuantPolicy):
+                rep = accuracy_report(m, p, xc, policy=precision)
+                record["accuracy"] = {
+                    "rel_err_vs_fp32": rep["rel_err"],
+                    "bound": rep["bound"],
+                    "quantized_nodes": rep["quantized_nodes"],
+                    "fp_nodes": rep["fp_nodes"]}
+                record["quant"] = {n: q.label()
+                                   for n, q in gp.quant.items()}
+            records.append(record)
 
         # fused vs unfused: the SAME tuned per-node configs, the fusion
         # pass on vs off — the cross-layer fusion delta (DESIGN.md §10)
@@ -158,6 +173,34 @@ def run(quick=True):
                         "fused": dict(gpf.fused),
                         "ir_nodes_fused": len(gpf.graph),
                         "ir_nodes_unfused": len(gpu.graph)})
+
+        # the same fused-vs-unfused delta for the quantized graph: int8
+        # specs carry their fusions in the cache key, so this exercises
+        # the fused-int8 path (requantize -> fp32 add/relu epilogue)
+        qpol = QuantPolicy()
+        gqf = m.graph_plan((1, HW, HW, C), precision=qpol)
+        gqu = m.graph_plan((1, HW, HW, C), precision=qpol, fuse=False)
+        fqf = jax.jit(lambda pp, x, gp=gqf, m=m: m.apply(pp, x,
+                                                         graph_plan=gp))
+        fqu = jax.jit(lambda pp, x, gp=gqu, m=m: m.apply(pp, x,
+                                                         graph_plan=gp))
+        us_qf = time_fn(fqf, p, x, repeats=3, warmup=1)
+        us_qu = time_fn(fqu, p, x, repeats=3, warmup=1)
+        qdtype = "+".join(sorted({n.spec.dtype
+                                  for n in gqf.graph.conv_nodes}))
+        rows.append(csv_row(
+            f"graph/{m.name}_fusion_delta_int8", us_qf,
+            f"dtype={qdtype} unfused_us={us_qu:.1f} "
+            f"speedup={us_qu / max(us_qf, 1e-9):.2f}x "
+            f"fused_nodes={len(gqf.fused)}"))
+        records.append({"name": f"graph/{m.name}_fusion_delta_int8",
+                        "config": f"{m.name} b1 {HW}x{HW}x{C}",
+                        "dtype": qdtype,
+                        "us": us_qf, "unfused_us": us_qu,
+                        "speedup": us_qu / max(us_qf, 1e-9),
+                        "fused": dict(gqf.fused),
+                        "quant": {n: q.label()
+                                  for n, q in gqf.quant.items()}})
     # ---- async front end: one frontend, two resolutions, deadlines ----
     # the configs/serve.py smoke deployment: resnet_like at 32x32 and
     # 16x16, continuous batching, double-buffered dispatch, per-request

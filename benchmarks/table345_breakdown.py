@@ -14,6 +14,7 @@ trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -24,6 +25,7 @@ from benchmarks.common import csv_row, time_fn, write_json
 from repro.configs.cnn_paper import PROFILED
 from repro.core import convspec as cs
 from repro.core import cuconv as cc
+from repro.quant.accuracy import spec_accuracy
 
 
 def run(quick=True):
@@ -36,7 +38,8 @@ def run(quick=True):
         # what the planner would run for this configuration, launch
         # config included (measured if a tuning sweep ran on this
         # machine, the executor's model default otherwise)
-        plan = cs.plan(cs.ConvSpec.for_conv(x, w, 1, "same"))
+        spec = cs.ConvSpec.for_conv(x, w, 1, "same")
+        plan = cs.plan(spec)
         planned = {"algorithm": plan.algorithm, "source": plan.source,
                    "config": plan.config.as_dict() if plan.config else {},
                    "config_source": plan.config_source}
@@ -68,6 +71,17 @@ def run(quick=True):
                             f"fusion_gain={(t1+t2)/max(t_fused,1e-9):.2f}x"))
         rows.append(csv_row(f"t345/{label}/library", t_lax, ""))
         rows.append(csv_row(f"t345/{label}/im2col_gemm", t_im2col, ""))
+        # beyond-paper int8 variant: the quantized executor on the same
+        # configuration (dynamic activation scale — no calibration in a
+        # per-call benchmark), with its per-layer accuracy delta vs fp32
+        plan8 = cs.plan(dataclasses.replace(spec, dtype="int8"))
+        t_int8 = time_fn(jax.jit(lambda x, w: plan8(x, w, None, None)),
+                         x, w, repeats=3, warmup=1)
+        acc8 = spec_accuracy(spec)
+        rows.append(csv_row(
+            f"t345/{label}/int8", t_int8,
+            f"{plan8.algorithm} rel_err={acc8['rel_err']:.4f} "
+            f"vs_library={t_lax / max(t_int8, 1e-9):.2f}x"))
         config = f"{hw}x{hw}x{C} b{batch} k{k} m{M}"
         for variant, us in (("stage1", t1), ("stage2", t2),
                             ("fused", t_fused), ("library", t_lax),
@@ -77,6 +91,14 @@ def run(quick=True):
             records.append({"name": f"t345/{label}/{variant}",
                             "config": config, "dtype": "float32",
                             "us": us, "planned": planned})
+        records.append({
+            "name": f"t345/{label}/int8", "config": config,
+            "dtype": "int8", "us": t_int8, "accuracy": acc8,
+            "planned": {
+                "algorithm": plan8.algorithm, "source": plan8.source,
+                "config": (plan8.config.as_dict() if plan8.config
+                           else {}),
+                "config_source": plan8.config_source}})
     path = write_json("table345", records)
     rows.append(f"# wrote {path}")
     return rows

@@ -39,7 +39,7 @@ EPILOGUES = ("none", "bias", "relu", "bias_relu")
 # canonical short spellings for ConvSpec.dtype / PrecisionPolicy inputs
 _DTYPE_ALIASES = {"fp32": "float32", "f32": "float32",
                   "bf16": "bfloat16", "bfloat16": "bfloat16",
-                  "float32": "float32"}
+                  "float32": "float32", "i8": "int8", "int8": "int8"}
 
 
 def canonical_dtype(dtype) -> str:
@@ -329,6 +329,12 @@ class ConvPlan:
     #: untunable executors) and its provenance
     config: Optional[object] = None
     config_source: str = "default"    # default | measured | forced
+    #: quantization payload (quant.policy.QuantInfo) for int8 specs: the
+    #: calibrated per-tensor activation scale + its provenance.  None on
+    #: fp plans AND on int8 plans resolved outside the quantize pass
+    #: (autotune timing) — the executor then falls back to a dynamic
+    #: in-trace scale
+    quant: Optional[object] = None
 
     @property
     def executor(self):
@@ -340,8 +346,9 @@ class ConvPlan:
         ex = self.executor
         cfg = (f" cfg[{self.config_source}]={self.config.key()}"
                if self.config else "")
+        q = f" quant[{self.quant.key()}]" if self.quant else ""
         return (f"{self.spec.key()} -> {self.algorithm} "
-                f"[{self.source}]{cfg} dtype={self.spec.dtype} "
+                f"[{self.source}]{cfg}{q} dtype={self.spec.dtype} "
                 f"accum={ex.accum} {self.reason}")
 
     # -- execution -------------------------------------------------------
@@ -355,9 +362,16 @@ class ConvPlan:
         if spec.fused_add == "none" and addend is not None:
             raise ValueError(f"plan for spec {spec.key()} does not take an "
                              f"addend (fused_add='none')")
+        kwargs = {}
+        if self.quant is not None:
+            # only int8-aware executors ever receive the payload — the
+            # quantize pass attaches it exclusively to plans whose
+            # executor declared int8 support
+            kwargs["quant"] = self.quant
         return self.executor.execute(
             spec, x, w, bias=bias if spec.has_bias else None,
-            addend=addend, interpret=self.interpret, config=self.config)
+            addend=addend, interpret=self.interpret, config=self.config,
+            **kwargs)
 
 
 def resolve_config(spec: ConvSpec, algorithm: str,

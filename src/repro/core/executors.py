@@ -333,7 +333,7 @@ class Executor:
 
     # -- execution -------------------------------------------------------
     def execute(self, spec, x, w, bias=None, addend=None, interpret=None,
-                config=None):
+                config=None, quant=None):
         """Run ``spec`` on ``(x, w, bias[, addend])``, epilogue included.
 
         Operands are cast to the spec dtype first (under a bf16
@@ -345,7 +345,10 @@ class Executor:
         in-kernel.  ``config`` is the plan's resolved launch config;
         executors whose ``_execute`` predates the config/fusion era
         (5-argument third-party subclasses) are called without the
-        newer kwargs.
+        newer kwargs.  ``quant`` is the quantization payload (calibrated
+        activation scale) ConvPlan forwards on int8 plans — ignored
+        here; int8-declaring executors override ``execute`` and consume
+        it.
         """
         dtype = jnp.dtype(spec.dtype)
         x = x if x.dtype == dtype else x.astype(dtype)
@@ -921,6 +924,126 @@ class FusedPallasExecutor(Executor):
             interpret=interpret)
 
 
+class Int8PallasExecutor(Executor):
+    """Int8 inference executor: symmetric quantization in, int8 x int8
+    -> **int32** accumulation on the MXU integer path, fp32
+    requantization in the epilogue (DESIGN.md §13).
+
+    The only executor declaring ``dtypes=("int8",)`` — the quantize
+    pass flips eligible conv specs to int8 and negotiation lands here;
+    every cache key (autotune configs, graph signatures) is
+    dtype-distinct by construction, so int8 tuning never collides with
+    the fp plans of the same geometry.
+
+    Scales: weights get **per-output-channel** symmetric scales computed
+    from the weight values in-trace (exact, no calibration needed);
+    activations use the **per-tensor** calibrated scale riding in the
+    plan's ``quant`` payload, falling back to a dynamic in-trace
+    ``max|x|/127`` when none rode in (autotune timing, ad-hoc plans).
+    Epilogue order: dequantize the int32 accumulator through
+    ``x_scale * w_scale[m]``, then bias + residual + activation + pool
+    at fp32 — identical shapes and operand dtypes to the fp executors,
+    so quantized nodes drop into any graph position.
+
+    Tuning space: the shared tiled-GEMM tiles over the im2col dims
+    (N*OH*OW, M, KH*KW*C); int8 tiles are a quarter the bytes of f32,
+    so bigger blocks stay VMEM-feasible — the throughput lever the
+    ROADMAP's int8 item names.
+    """
+    name = "cuconv_int8"
+    dtypes = ("int8",)
+    accum = "int32"
+    takes_interpret = True
+    tunable = ("tp", "tm", "tc")
+
+    def _supports(self, spec):
+        return True, "int8 im2col GEMM, int32 accumulation"
+
+    def heuristic_claim(self, spec, backend):
+        if backend == "tpu":
+            return 95, "int8: quantized GEMM on the MXU integer path"
+        return None
+
+    def extra_hbm_bytes(self, spec):
+        # the materialized int8 patch matrix (1 byte/elem)
+        n, oh, ow, _ = spec.out_shape
+        kh, kw, c, _ = spec.filter_shape
+        return float(n * oh * ow * kh * kw * c)
+
+    def _gemm_dims(self, spec):
+        n, oh, ow, m = spec.out_shape
+        kh, kw, c, _ = spec.filter_shape
+        return n * oh * ow, m, kh * kw * c
+
+    def configs(self, spec):
+        return _gemm_tile_configs(*self._gemm_dims(spec))
+
+    def vmem_bytes(self, spec, config=None):
+        # int8 input blocks double buffered; int32 output block + int32
+        # VMEM accumulator
+        cfg = LaunchConfig.of(config)
+        tp, tm = cfg.get("tp", 256), cfg.get("tm", 128)
+        tc = cfg.get("tc", 512)
+        return 2 * (tp * tc + tc * tm) + 8 * tp * tm
+
+    def config_cost(self, spec, config):
+        return _gemm_tile_steps(*self._gemm_dims(spec), config)
+
+    def execute(self, spec, x, w, bias=None, addend=None, interpret=None,
+                config=None, quant=None):
+        # full override: the base cast-to-spec-dtype would truncate
+        # float operands to int8 — quantization IS the cast here
+        from repro.quant import symmetric
+        if spec.fused_add != "none" and addend is None:
+            raise ValueError(f"fused-add spec {spec.key()} needs an addend")
+        f32 = jnp.float32
+        x, w = x.astype(f32), w.astype(f32)
+        if quant is not None and getattr(quant, "x_scale", 0) > 0:
+            x_scale = jnp.asarray(quant.x_scale, f32)
+        else:
+            x_scale = symmetric.scale_for(symmetric.abs_max(x))
+        w_scales = symmetric.channel_scales(w)          # (M,) per-channel
+        xq = symmetric.quantize_to_int8(x, x_scale)
+        wq = symmetric.quantize_to_int8(w, w_scales)
+        acc = self._execute(spec, xq, wq, None, interpret,
+                            config=LaunchConfig.of(config))
+        # fp32 requantization epilogue: dequantize the int32 accumulator
+        # through the outer product of scales, THEN bias/residual/
+        # activation/pool at fp32 (base executors' epilogue order)
+        y = acc.astype(f32) * (x_scale * w_scales)
+        if spec.has_bias:
+            y = y + bias.astype(f32)
+        if spec.fused_add != "none":
+            y = y + addend.astype(f32)
+            if spec.fused_add == "add_relu":
+                y = jnp.maximum(y, 0)
+        elif spec.wants_relu:
+            y = jnp.maximum(y, 0)
+        if spec.fused_pool:
+            from repro.kernels import ops
+            kind, pkh, pkw, psh, psw, pph, ppw = spec.fused_pool
+            y = ops.pool2d(y, kind=kind, window=(pkh, pkw),
+                           stride=(psh, psw), padding=(pph, ppw))
+        return y
+
+    def _execute(self, spec, x, w, bias, interpret, config=None):
+        # bare int8 conv: int8 patch matrix (zero padding is exact under
+        # symmetric quantization) -> tiled int8 GEMM -> int32 accumulator
+        from repro.core.cuconv import _pad_input, _tap_views
+        from repro.kernels import ops
+        cfg = LaunchConfig.of(config)
+        kh, kw, c, m = spec.filter_shape
+        n, oh, ow, _ = spec.out_shape
+        xp = _pad_input(x, *spec.padding)
+        patches = jnp.stack(
+            _tap_views(xp, kh, kw, oh, ow, spec.stride),
+            axis=3).reshape(n * oh * ow, kh * kw * c)
+        acc = ops.int8_gemm(patches, w.reshape(kh * kw * c, m),
+                            interpret=interpret, tp=cfg.get("tp", 256),
+                            tm=cfg.get("tm", 128), tc=cfg.get("tc", 512))
+        return acc.reshape(n, oh, ow, m)
+
+
 def _register_builtins() -> None:
     # registration order == the historical ALGORITHMS order (iteration
     # order is visible to autotune candidates and the quickstart)
@@ -936,6 +1059,9 @@ def _register_builtins() -> None:
             (FusedPallasExecutor(), cuconv.conv_cuconv_pallas)):
         ex.fn = fn
         register(ex)
+    # no bare-fn surface: the quantize/dequantize epilogue only makes
+    # sense through ConvPlan (the registered-executor path)
+    register(Int8PallasExecutor())
 
 
 _register_builtins()

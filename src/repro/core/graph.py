@@ -112,6 +112,15 @@ class PrecisionPolicy:
         ovr = ",".join(f"{n}={d}" for n, d in self.overrides)
         return f"{self.default}[{ovr}]"
 
+    def quantizer(self):
+        """The quantization policy riding this precision policy, or None.
+
+        Plain precision policies never quantize; ``quant.QuantPolicy``
+        overrides this to return itself — the one hook ``plan_graph``
+        threading keys off, so fp callers pay nothing.
+        """
+        return None
+
 # Persisted graph-plan entry schema.  v1 was the positional
 # {"algorithms": [...]} list of the chain era (implicitly unversioned);
 # v2 is {"schema": 2, "algorithms": {node_name: algo}} over the IR.
@@ -727,6 +736,11 @@ class GraphPlan:
     # pass from here so measured fused-vs-unfused verdicts can flip a
     # rewrite on or off
     base_graph: Optional[Graph] = None
+    # quantization provenance: {conv node: quant.policy.NodeQuant} —
+    # covers EVERY conv node when a QuantPolicy planned this graph
+    # (int8 nodes carry their scale source, fp nodes the fallback
+    # reason); empty on fp plans
+    quant: Dict[str, object] = dataclasses.field(default_factory=dict)
     # per-conv-node jitted executables, shared by warmup() and run() so
     # the warmup compile sweep is the same program inference reuses
     _jitted: Dict[str, Callable] = dataclasses.field(
@@ -764,10 +778,14 @@ class GraphPlan:
                 if prov:
                     kind, _, consumed = prov.partition(":")
                     fz = f" fused[{kind}]={consumed}"
+                qz = ""
+                nq = self.quant.get(node.name)
+                if nq is not None:
+                    qz = f" quant[{nq.label()}]"
                 lines.append(
                     f"  {node.name:>8s}  {h:>3d}x{w:<3d} c{c:<4d} {kh}x{kw}/"
                     f"{s.stride[0]}{grp} m{m:<4d} {s.dtype:>9s} -> "
-                    f"{p.algorithm:24s} [{p.source}]{cfg}{fz} {p.reason}")
+                    f"{p.algorithm:24s} [{p.source}]{cfg}{fz}{qz} {p.reason}")
             else:
                 out = self.graph.shapes[node.name]
                 lines.append(f"  {node.name:>8s}  {node.descriptor():50s} "
@@ -806,7 +824,7 @@ class GraphPlan:
                              f"but params carry none")
         return p
 
-    def run(self, x, params):
+    def run(self, x, params, observe: Optional[Callable] = None):
         """Execute the DAG on ``x``.
 
         ``params``: ``{node_name: {"w": ..., "b": ...}}`` for conv and
@@ -814,6 +832,11 @@ class GraphPlan:
         graphs lowered from ``ConvGraph.chain`` — the legacy list of
         one ``(w, bias)`` pair per conv node in graph order.  No plan()
         resolution happens here — the program was resolved up front.
+
+        ``observe``, when given, is called as ``observe(name, value)``
+        with every conv node's INPUT activation (a concrete array —
+        only the per-node executables are jitted, not the DAG walk);
+        the calibration collector rides this hook.
         """
         params = self._named_params(params)
         from repro.kernels import ops
@@ -821,6 +844,8 @@ class GraphPlan:
         for node in self.graph.nodes:
             ins = [values[e] for e in node.inputs]
             if isinstance(node, ConvOp):
+                if observe is not None:
+                    observe(node.name, ins[0])
                 p = self._node_params(params, node, node.spec.has_bias)
                 a = ins[1] if node.spec.fused_add != "none" else None
                 y = self._node_fn(node.name)(
@@ -848,9 +873,21 @@ class GraphPlan:
             values[node.name] = y
         return values[self.graph.output]
 
+    def _attach_quant(self) -> None:
+        """Re-attach the quantization payload (calibrated activation
+        scale) to int8 node plans — needed after any re-resolution,
+        since plan() knows nothing of calibration."""
+        from repro.quant.policy import QuantInfo
+        for name, nq in self.quant.items():
+            if getattr(nq, "quantized", False) and name in self.conv_plans:
+                self.conv_plans[name] = dataclasses.replace(
+                    self.conv_plans[name],
+                    quant=QuantInfo(nq.x_scale, nq.source))
+
     # -- warmup / autotune ----------------------------------------------
     def warmup(self, *, measure: bool = False,
-               tune: Optional[str] = None, repeats: int = 3) -> Dict:
+               tune: Optional[str] = None, repeats: int = 3,
+               calibrate: Optional[object] = None) -> Dict:
         """Compile (and optionally measure-autotune) every conv node in
         one sweep.
 
@@ -864,13 +901,23 @@ class GraphPlan:
         zero re-measurement.  ``measure=True`` is the back-compat
         spelling of ``tune="algo"``.
 
+        ``calibrate`` takes a ``quant.Calibrator`` (sample batch +
+        params + observer choice): the plan runs over the batch first,
+        recording every conv node's input activation range into the
+        persisted ``calibration.json`` — the scales a later
+        ``QuantPolicy``-planned graph quantizes with (DESIGN.md §13).
+
         Returns ``{"nodes": [...], "total_ms": float}`` with one
-        algorithm/config/source/compile-time row per conv node.
+        algorithm/config/source/compile-time row per conv node (plus a
+        ``"calibration"`` entry map when ``calibrate`` ran).
         """
         from repro.core import autotune
         if measure and tune is None:
             tune = "algo"
         t_start = time.perf_counter()
+        calib_entries = None
+        if calibrate is not None:
+            calib_entries = calibrate.collect(self)
         if tune is not None:
             # tune-mode and backend-mismatch validation live in
             # tune_spec (one home), which raises before any node is
@@ -894,6 +941,7 @@ class GraphPlan:
                                                repeats=repeats)
             self.conv_plans = {n.name: plan(n.spec, backend=self.backend)
                                for n in self.graph.conv_nodes}
+            self._attach_quant()        # re-resolution dropped the scales
             self._jitted.clear()        # stale traces must not serve on
             _persist(self.base_graph or self.graph, self.backend,
                      self.conv_plans, alias=self.graph)
@@ -914,8 +962,11 @@ class GraphPlan:
                          "config": (p.config.as_dict() if p.config else {}),
                          "config_source": p.config_source,
                          "compile_ms": (time.perf_counter() - t0) * 1e3})
-        return {"nodes": rows,
-                "total_ms": (time.perf_counter() - t_start) * 1e3}
+        out = {"nodes": rows,
+               "total_ms": (time.perf_counter() - t_start) * 1e3}
+        if calib_entries is not None:
+            out["calibration"] = calib_entries
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -923,43 +974,61 @@ class GraphPlan:
 
 def plan_graph(graph: GraphLike, *, backend: Optional[str] = None,
                force: Optional[str] = None,
-               use_cache: bool = True, fuse: bool = True) -> GraphPlan:
+               use_cache: bool = True, fuse: bool = True,
+               quant: Optional[object] = None) -> GraphPlan:
     """Resolve a whole-network plan once.
 
     Accepts the IR (``Graph``) or the compatibility chain
-    (``ConvGraph``, lowered via ``to_ir``).  The cross-layer fusion
-    pass (``fuse_graph``) rewrites the IR first — ``fuse=False`` is the
-    escape hatch serving the unfused program.  Forced plans bypass the
-    persisted cache in both directions (they are a debugging/benchmark
-    tool, not a deployment choice).  Otherwise a persisted entry keyed
-    by backend + the PRE-fusion graph signature (so callers address the
-    cache by the graph they wrote, not the pass's output) reconstructs
-    the program with zero per-node plan() resolutions; entries that are
-    unversioned, carry a foreign schema, or name unknown /
-    no-longer-supported algorithms are dropped and re-resolved.
+    (``ConvGraph``, lowered via ``to_ir``).  A ``quant`` policy
+    (``quant.QuantPolicy``) runs the int8 quantize pass over the IR
+    first — eligible conv nodes' specs flip to int8 (DESIGN.md §13) —
+    so everything downstream (fusion, cache keys, autotune) sees the
+    quantized graph and is dtype-distinct by construction.  The
+    cross-layer fusion pass (``fuse_graph``) rewrites the IR next —
+    ``fuse=False`` is the escape hatch serving the unfused program.
+    Forced plans bypass the persisted cache in both directions (they
+    are a debugging/benchmark tool, not a deployment choice).
+    Otherwise a persisted entry keyed by backend + the PRE-fusion graph
+    signature (so callers address the cache by the graph they wrote,
+    not the pass's output) reconstructs the program with zero per-node
+    plan() resolutions; entries that are unversioned, carry a foreign
+    schema, or name unknown / no-longer-supported algorithms are
+    dropped and re-resolved.
     """
     ir = _as_ir(graph)
     backend = backend or jax.default_backend()
+    qprov: Dict[str, object] = {}
+    qinfos: Dict[str, object] = {}
+    if quant is not None:
+        from repro.quant.policy import quantize_graph
+        ir, qprov, qinfos = quantize_graph(ir, quant, backend)
     fmap: Dict[str, str] = {}
     base = ir if fuse else None
     prog = ir
     if fuse:
         prog, fmap = fuse_graph(ir, backend)
+
+    def _attach(plans: Dict[str, ConvPlan]) -> Dict[str, ConvPlan]:
+        for name, qi in qinfos.items():
+            if name in plans:
+                plans[name] = dataclasses.replace(plans[name], quant=qi)
+        return plans
+
     if force is not None:
         plans = {n.name: plan(n.spec, force=force, backend=backend)
                  for n in prog.conv_nodes}
-        return GraphPlan(prog, plans, backend, "forced",
-                         fused=fmap, base_graph=base)
+        return GraphPlan(prog, _attach(plans), backend, "forced",
+                         fused=fmap, base_graph=base, quant=qprov)
     if use_cache:
         cached = _plans_from_cache(prog, backend, key_graph=ir)
         if cached is not None:
-            return GraphPlan(prog, cached, backend, "graph_cache",
-                             fused=fmap, base_graph=base)
+            return GraphPlan(prog, _attach(cached), backend, "graph_cache",
+                             fused=fmap, base_graph=base, quant=qprov)
     plans = {n.name: plan(n.spec, backend=backend) for n in prog.conv_nodes}
     if use_cache:       # use_cache=False means no cache interaction AT ALL
         _persist(ir, backend, plans, alias=prog)
-    return GraphPlan(prog, plans, backend, "resolved",
-                     fused=fmap, base_graph=base)
+    return GraphPlan(prog, _attach(plans), backend, "resolved",
+                     fused=fmap, base_graph=base, quant=qprov)
 
 
 def _graph_key(graph: GraphLike, backend: str) -> str:

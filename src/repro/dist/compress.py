@@ -17,6 +17,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.quant import symmetric
+
 BLOCK = 256
 
 
@@ -29,16 +31,14 @@ def quantize(x, block: int = BLOCK):
     if pad:
         flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, block)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    safe = jnp.where(scale > 0, scale, 1.0)
-    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    scale = symmetric.scale_for(
+        symmetric.abs_max(blocks, axis=1, keepdims=True))
+    q = symmetric.quantize_to_int8(blocks, scale)
     return q, scale, shape
 
 
 def dequantize(q, scale, shape):
-    # no zero-guard needed: a zero scale means the block quantized to all
-    # zeros, and 0 * 0 is already right (the guard lives in quantize)
-    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    flat = symmetric.dequantize_int8(q, scale).reshape(-1)
     n = 1
     for d in shape:
         n *= d

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels import (conv1x1 as _c1, cuconv_stage1 as _s1,
                            cuconv_stage2 as _s2, cuconv_fused as _cf,
-                           conv1d_tap as _c1d, flash_attention as _fa)
+                           conv1d_tap as _c1d, flash_attention as _fa,
+                           int8_gemm as _i8)
 
 
 from repro.core.convspec import normalize_stride as _norm_stride  # one home
@@ -38,6 +39,13 @@ def conv1x1(x, w, interpret=None, tp=256, tm=128, tc=512):
     out = _c1.conv1x1_gemm(x.reshape(N * H * W_, C), w, tp=tp, tm=tm, tc=tc,
                            interpret=_auto_interpret(interpret))
     return out.reshape(N, H, W_, -1)
+
+
+def int8_gemm(x2d, w, interpret=None, tp=256, tm=128, tc=512):
+    """x2d: (P, C) int8; w: (C, M) int8.  Returns (P, M) **int32** — the
+    raw accumulator; dequantization is the int8 executor's epilogue."""
+    return _i8.int8_gemm(x2d, w, tp=tp, tm=tm, tc=tc,
+                         interpret=_auto_interpret(interpret))
 
 
 def cuconv_two_stage(x, w, padding=(0, 0), interpret=None,

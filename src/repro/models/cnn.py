@@ -105,14 +105,25 @@ class GraphModel:
         """The whole-network plan for one input geometry, resolved once
         per (geometry, backend, force, precision, fuse) and memoized on
         the model.  ``fuse=False`` serves the unfused program (the
-        cross-layer fusion pass is on by default)."""
+        cross-layer fusion pass is on by default).
+
+        A ``quant.QuantPolicy`` rides the same ``precision=`` parameter
+        (it IS a PrecisionPolicy): the int8 quantize pass runs inside
+        ``plan_graph``, and the memo key carries the calibration
+        generation so a recalibration re-quantizes instead of serving a
+        plan built on stale scales."""
         backend = backend or jax.default_backend()
         pol = self._policy(precision, dtype)
+        quant = pol.quantizer()
         key = (tuple(map(int, in_shape)), backend, force, pol.key(), fuse)
+        if quant is not None:
+            from repro.quant import calibrate
+            key = key + (calibrate.generation(),)
         gp = self._plan_cache.get(key)
         if gp is None:
             gp = plan_graph(self.graph(in_shape, precision=pol),
-                            backend=backend, force=force, fuse=fuse)
+                            backend=backend, force=force, fuse=fuse,
+                            quant=quant)
             self._plan_cache[key] = gp
         return gp
 

@@ -1,0 +1,34 @@
+"""Int8 quantized inference subsystem (DESIGN.md §13).
+
+Takes a planned CNN graph from fp32/bf16 to served int8 with no API
+break: calibration observers collect per-node activation ranges during
+``GraphPlan.warmup(calibrate=...)``, ``QuantPolicy`` decides which conv
+nodes quantize (per-channel symmetric weight scales, per-tensor
+activation scales from calibration, first/last-layer fp fallback), and
+the ``cuconv_int8`` executor runs int8 x int8 -> int32 accumulation
+with fp32 requantization in the epilogue.
+
+Attribute access is lazy (PEP 562) so ``quant.symmetric`` — the
+scale/clip/round core ``dist/compress.py`` also rides — imports without
+dragging the graph/executor stack in.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "CALIB_SCHEMA": "calibrate", "Calibrator": "calibrate",
+    "calibration_entry": "calibrate", "clear_cache": "calibrate",
+    "graph_key": "calibrate",
+    "NodeQuant": "policy", "QuantInfo": "policy",
+    "QuantPolicy": "policy", "quantize_graph": "policy",
+    "accuracy_report": "accuracy", "assert_accuracy": "accuracy",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.quant' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"repro.quant.{mod}"), name)

@@ -1,0 +1,97 @@
+"""Quantization accuracy harness: bounded output error vs fp32.
+
+Two surfaces:
+
+  * ``accuracy_report`` / ``assert_accuracy`` — whole-network: run the
+    QuantPolicy-planned graph and the fp32 graph of the same model on
+    the same inputs and compare final outputs (the CI ``int8-smoke``
+    gate and the end-to-end tests ride this).
+  * ``spec_accuracy`` — per-layer: one int8 ConvSpec vs its fp32 twin
+    on random operands (the paper-table benchmark's accuracy-delta
+    column rides this).
+
+The documented bound (``DEFAULT_BOUND``, relative to the fp32 output's
+absolute max) covers symmetric per-tensor activation + per-channel
+weight quantization on calibrated data: each int8 grid contributes at
+most ``amax/254`` per element, and the fp32 requantization epilogue
+adds no further error.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+#: documented relative-error bound (vs the fp32 output's abs max) for
+#: calibrated int8 inference — asserted by tests and the CI smoke
+DEFAULT_BOUND = 0.05
+
+
+def _rel_err(y_q, y_fp) -> dict:
+    y_q = np.asarray(y_q, np.float32)
+    y_fp = np.asarray(y_fp, np.float32)
+    ref = float(np.abs(y_fp).max())
+    abs_err = float(np.abs(y_q - y_fp).max())
+    return {"abs_err": abs_err, "ref_absmax": ref,
+            "rel_err": abs_err / (ref + 1e-12)}
+
+
+def accuracy_report(model, params, x, policy=None,
+                    backend: Optional[str] = None) -> dict:
+    """Quantized-vs-fp32 output error for one model + input batch.
+
+    ``policy`` defaults to ``QuantPolicy()`` (int8, fp32 fallback,
+    absmax observer).  Returns the error stats plus per-node quant
+    provenance — which nodes ran int8 and why the rest stayed fp.
+    """
+    from repro.core.graph import PrecisionPolicy
+    from repro.quant.policy import QuantPolicy
+    policy = policy if policy is not None else QuantPolicy()
+    gp_fp = model.graph_plan(x.shape, backend=backend,
+                             precision=PrecisionPolicy("float32"))
+    gp_q = model.graph_plan(x.shape, backend=backend, precision=policy)
+    rep = _rel_err(gp_q.run(x, params), gp_fp.run(x, params))
+    rep["quantized_nodes"] = sorted(
+        n for n, q in gp_q.quant.items() if q.quantized)
+    rep["fp_nodes"] = {n: q.source for n, q in gp_q.quant.items()
+                       if not q.quantized}
+    rep["bound"] = DEFAULT_BOUND
+    return rep
+
+
+def assert_accuracy(model, params, x, policy=None,
+                    bound: float = DEFAULT_BOUND,
+                    backend: Optional[str] = None) -> dict:
+    """``accuracy_report`` that raises when the bound is exceeded;
+    returns the report so callers can log it."""
+    rep = accuracy_report(model, params, x, policy=policy, backend=backend)
+    if rep["rel_err"] > bound:
+        raise AssertionError(
+            f"int8 output error {rep['rel_err']:.4f} exceeds the "
+            f"documented bound {bound} (abs {rep['abs_err']:.4f} vs "
+            f"fp32 absmax {rep['ref_absmax']:.4f}; quantized nodes: "
+            f"{rep['quantized_nodes']})")
+    return rep
+
+
+def spec_accuracy(spec, seed: int = 0) -> dict:
+    """Per-layer int8-vs-fp32 error for one ConvSpec on random operands
+    (unit-normal activations, 0.1-std weights — the benchmark regime).
+
+    ``spec`` may be fp or int8; both variants are derived from it.
+    """
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.core import convspec as cs
+    rng = np.random.default_rng(seed)
+    fp = dataclasses.replace(spec, dtype="float32")
+    q8 = dataclasses.replace(spec, dtype="int8")
+    x = jnp.asarray(rng.standard_normal(fp.in_shape), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(fp.filter_shape) * 0.1, jnp.float32)
+    b = (jnp.asarray(rng.standard_normal((fp.filter_shape[3],)) * 0.1,
+                     jnp.float32) if fp.has_bias else None)
+    a = (jnp.asarray(rng.standard_normal(fp.out_shape), jnp.float32)
+         if fp.fused_add != "none" else None)
+    y_fp = cs.plan(fp)(x, w, b, a)
+    y_q = cs.plan(q8)(x, w, b, a)
+    return _rel_err(y_q, y_fp)

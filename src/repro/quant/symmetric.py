@@ -1,0 +1,57 @@
+"""Symmetric int8 scale/clip/round core.
+
+The ONE place the repo maps float tensors onto the signed-127 grid —
+shared by the gradient-compression path (``dist/compress.py``, per-block
+scales) and the inference quantizer (``quant/``, per-channel weight and
+per-tensor activation scales), so the two int8 paths cannot drift.
+
+Convention: symmetric around zero with the -128 code unused, i.e.
+``q = clip(round(x / scale), -127, 127)`` with ``scale = amax / 127``.
+A zero ``amax`` (all-zero tensor/block/channel) quantizes to all zeros
+through a guarded divisor, and dequantizing with the *unguarded* zero
+scale is exact — the guard never leaks into the wire format.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: largest magnitude representable: symmetric grid, -128 unused
+QMAX = 127.0
+
+
+def scale_for(amax):
+    """Symmetric int8 scale for a known absolute maximum."""
+    return amax / QMAX
+
+
+def safe_scale(scale):
+    """Divisor-safe view of a scale: zero scales divide as 1.0 (the
+    quantized values are all zero either way)."""
+    return jnp.where(scale > 0, scale, 1.0)
+
+
+def quantize_to_int8(x, scale):
+    """``clip(round(x / scale), -127, 127)`` as int8, zero-scale safe."""
+    return jnp.clip(jnp.round(x / safe_scale(scale)),
+                    -QMAX, QMAX).astype(jnp.int8)
+
+
+def dequantize_int8(q, scale):
+    """Back to fp32; no zero-guard needed — a zero scale means the
+    values quantized to all zeros, and 0 * 0 is already right."""
+    return q.astype(jnp.float32) * scale
+
+
+def abs_max(x, axis=None, keepdims: bool = False):
+    """max|x| in fp32 — the amax every symmetric scale derives from."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                   keepdims=keepdims)
+
+
+def channel_scales(w):
+    """Per-output-channel symmetric scales for an HWIO filter.
+
+    Returns shape ``(M,)`` fp32: ``max|w[..., m]| / 127`` — the
+    per-channel weight grid the int8 executor dequantizes through.
+    """
+    return scale_for(abs_max(w, axis=tuple(range(w.ndim - 1))))

@@ -146,6 +146,7 @@ class BucketPrograms:
         self.fuse = fuse
         self._input_dtype = np.dtype(input_dtype or np.float32)
         self._fns: Dict[int, Callable] = {}    # global bucket -> program
+        self._plans: Dict[int, object] = {}    # global bucket -> GraphPlan
         # built once: NamedSharding construction is ~0.1ms of pure
         # Python, far too hot to repeat on every packed batch
         self._in_sharding = (None if mesh is None
@@ -170,6 +171,23 @@ class BucketPrograms:
     def compiled_buckets(self) -> Tuple[int, ...]:
         """Batch sizes with a built program — never exceeds ``buckets``."""
         return tuple(sorted(self._fns))
+
+    def serve_dtype(self, b: int) -> str:
+        """The compute dtype(s) global bucket ``b``'s program serves its
+        conv nodes in — ``"int8"`` for a fully quantized graph,
+        ``"float32+int8"`` for a QuantPolicy with fp fallback nodes,
+        ``"bfloat16"``/``"float32"`` for plain precision policies.
+        Builds the bucket's plan on first use (same path as ``fn``)."""
+        if b not in self._plans:
+            self.fn(b)
+        gp = self._plans[b]
+        dtypes = sorted({p.spec.dtype for p in gp.conv_plans.values()})
+        return "+".join(dtypes) if dtypes else str(self._input_dtype)
+
+    def serve_dtypes(self) -> Dict[int, str]:
+        """``{global bucket: serving dtype}`` over the configured
+        buckets (plans are resolved as needed — cached thereafter)."""
+        return {b: self.serve_dtype(b) for b in self.buckets}
 
     def pick_bucket(self, pending: int) -> int:
         """Largest bucket the pending unit count fills, else the
@@ -221,6 +239,7 @@ class BucketPrograms:
         f = self._fns.get(b)
         if f is None:
             gp = self._shard_plan(b)
+            self._plans[b] = gp
             if self.mesh is None:
                 f = jax.jit(lambda params, xb: self.model.apply(
                     params, xb, graph_plan=gp))
@@ -279,6 +298,7 @@ class BucketPrograms:
                 # already-compiled program would keep serving the stale
                 # trace, so force a rebuild
                 self._fns.pop(b, None)
+                self._plans.pop(b, None)
             f = self.fn(b)
             x = self.put(np.zeros((b, H, W, C), self.input_dtype()))
             t0 = time.perf_counter()
@@ -341,6 +361,11 @@ class CnnServeEngine:
     def _fns(self) -> Dict[int, Callable]:
         # the live program table (tests and callers may inspect/patch it)
         return self.programs._fns
+
+    def serve_dtypes(self) -> Dict[int, str]:
+        """Per-bucket serving dtype (see ``BucketPrograms.serve_dtype``)
+        — ``"int8"`` buckets are proof the engine serves quantized."""
+        return self.programs.serve_dtypes()
 
     def _bucket_fn(self, b: int) -> Callable:
         return self.programs.fn(b)

@@ -302,7 +302,8 @@ class AsyncServeFrontend:
             geometry=_geom(shape), bucket=bucket, units=len(chunk),
             padded=bucket - len(chunk), transfer_t0=t0, transfer_t1=t1,
             dispatch_t=td, overlapped=overlapped,
-            shard_units=progs.shard_units(len(chunk), bucket))
+            shard_units=progs.shard_units(len(chunk), bucket),
+            dtype=progs.serve_dtype(bucket))
         for r, _ in chunk:
             if r._first_dispatch_t is None:
                 r._first_dispatch_t = t0
@@ -405,6 +406,13 @@ class AsyncServeFrontend:
         st.update({
             "geometries": [_geom(s) for s in self.programs],
             "batches_by_program": dict(sorted(self._batch_counts.items())),
+            # serving dtype per BUILT bucket program ("int8" /
+            # "float32+int8" under a QuantPolicy) — unbuilt buckets are
+            # omitted rather than force-planned here
+            "serve_dtype_by_program": {
+                f"{_geom(shape)}/b{b}": progs.serve_dtype(b)
+                for shape, progs in self.programs.items()
+                for b in progs.compiled_buckets},
             "pending": self.pending_counts(),
             "inflight": len(self._inflight),
             "max_inflight": self._max_inflight,

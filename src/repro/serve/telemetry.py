@@ -80,7 +80,11 @@ class BatchTrace:
     smoke test asserts on.  ``shard_units`` (sharded serving only) is
     how many REAL images landed on each mesh device — batch padding
     concentrates in the trailing shards, so ``max - min`` per batch is
-    the shard-imbalance signal ``rollup()`` counts."""
+    the shard-imbalance signal ``rollup()`` counts.  ``dtype`` is the
+    serving dtype of the bucket program that ran the batch (e.g.
+    ``"float32"``, ``"bfloat16"``, ``"float32+int8"`` for a quantized
+    graph with fp fallback nodes) — stamped by the dispatcher, opaque
+    here."""
     geometry: str
     bucket: int
     units: int                          # real (non-padded) images
@@ -91,6 +95,7 @@ class BatchTrace:
     harvest_t: float = 0.0
     overlapped: bool = False
     shard_units: Optional[Sequence[int]] = None    # per-device real images
+    dtype: Optional[str] = None         # bucket program's serving dtype
 
     @property
     def transfer_ms(self) -> float:
@@ -174,7 +179,23 @@ class Telemetry:
                                       if b.overlapped),
             "latency_ms": self.latency_ms(),
         }
+        dtypes = self.dtype_rollup()
+        if dtypes:
+            out["serve_dtypes"] = dtypes
         shard = self.shard_rollup()
         if shard is not None:
             out["sharding"] = shard
+        return out
+
+    def dtype_rollup(self) -> Dict[str, Dict[str, int]]:
+        """Per serving-dtype batch/image counters over the dispatched
+        batches — ``{"int8": {"batches": 3, "images": 12}, ...}``.
+        Empty when no dispatcher stamped a dtype (older layers)."""
+        out: Dict[str, Dict[str, int]] = {}
+        for b in self.batches:
+            if b.dtype is None:
+                continue
+            d = out.setdefault(b.dtype, {"batches": 0, "images": 0})
+            d["batches"] += 1
+            d["images"] += int(b.units)
         return out

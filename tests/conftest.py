@@ -15,8 +15,10 @@ def _hermetic_cache_dir(tmp_path_factory):
     os.environ["REPRO_CACHE_DIR"] = str(d)
     # drop anything already read from the old dir during collection
     from repro.core import autotune, graph
+    from repro.quant import calibrate
     autotune.clear_cache()
     graph.clear_cache()
+    calibrate.clear_cache()
     yield
     if old is None:
         os.environ.pop("REPRO_CACHE_DIR", None)

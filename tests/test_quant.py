@@ -1,0 +1,335 @@
+"""Int8 quantization subsystem: calibration persistence, QuantPolicy
+gating, the int8 executor's numerics, and quantized serving end to end."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core import convspec as cs
+from repro.core import executors as ex
+from repro.core.graph import PrecisionPolicy
+from repro.models import cnn as M
+from repro.quant import calibrate as cal
+from repro.quant import symmetric
+from repro.quant.accuracy import DEFAULT_BOUND, assert_accuracy
+from repro.quant.policy import QuantPolicy
+
+
+def _sample_batch(rng, batch=4, shape=(32, 32, 3)):
+    return np.asarray(rng.standard_normal((batch,) + shape), np.float32)
+
+
+def _tiny_model():
+    """Two eligible convs + head, per-node params (GraphModel, not
+    SimpleCNN, so ``GraphPlan.run`` can drive it directly)."""
+    from repro.core.graph import GraphBuilder
+
+    def build(in_shape, dtype):
+        b = GraphBuilder(in_shape, dtype)
+        y = b.conv("c0", "input", 3, 6)
+        y = b.conv("c1", y, 1, 8)
+        y = b.gap("gap", y)
+        b.dense("head", y, 3)
+        return b.graph()
+    return M.GraphModel(build, (8, 8, 3), name="tinyq")
+
+
+def _calibrated_resnet(rng, batch=4):
+    """resnet_like + params + a sample batch, calibrated via warmup."""
+    m = M.resnet_like()
+    params = m.init(jax.random.PRNGKey(0))
+    x = _sample_batch(rng, batch)
+    out = m.graph_plan(x.shape).warmup(
+        calibrate=cal.Calibrator(x, params))
+    return m, params, x, out["calibration"]
+
+
+# ---------------------------------------------------------------------------
+# symmetric helpers (the one core shared with dist/compress.py)
+
+def test_symmetric_roundtrip_and_channel_scales(rng):
+    x = jnp.asarray(rng.normal(size=(64,)) * 3.0, jnp.float32)
+    scale = symmetric.scale_for(symmetric.abs_max(x))
+    back = symmetric.dequantize_int8(
+        symmetric.quantize_to_int8(x, scale), scale)
+    # each int8 grid cell is `scale` wide: round-to-nearest error <= scale/2
+    assert float(jnp.abs(back - x).max()) <= float(scale) / 2 + 1e-7
+    # zero range: quantizes to zeros instead of dividing by zero
+    z = symmetric.quantize_to_int8(jnp.zeros((4,)), jnp.float32(0.0))
+    assert not np.asarray(z).any()
+    w = jnp.asarray(rng.normal(size=(3, 3, 6, 5)), jnp.float32)
+    scales = symmetric.channel_scales(w)
+    assert scales.shape == (5,)
+    np.testing.assert_allclose(
+        np.asarray(scales),
+        np.abs(np.asarray(w)).max(axis=(0, 1, 2)) / 127.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# calibration persistence
+
+def test_calibration_determinism(rng, tmp_path, monkeypatch):
+    """Same model + same sample batch -> bit-identical calibration.json,
+    however many times the store starts fresh."""
+    x = _sample_batch(rng)
+
+    def calibrate_fresh(store):
+        monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / store))
+        cal.clear_cache()
+        m = M.resnet_like()
+        params = m.init(jax.random.PRNGKey(0))
+        cal.Calibrator(x, params).collect(m.graph_plan(x.shape))
+        return json.loads((tmp_path / store / "calibration.json").read_text())
+
+    first, second = calibrate_fresh("a"), calibrate_fresh("b")
+    assert first == second
+    assert len(first) >= 6          # every resnet_like conv observed
+
+
+def test_calibration_entry_schema_gate(rng):
+    """Unversioned / foreign-schema / malformed entries are dropped on
+    read (the autotune.json v2 contract), never misdecoded into scales."""
+    m = M.resnet_like()
+    g = m.graph((1, 32, 32, 3))
+    key = f"{cal.graph_key(g)}/stem"
+    for bad in [{"amax": 1.0},                          # unversioned
+                {"schema": cal.CALIB_SCHEMA + 1, "amax": 1.0},  # foreign
+                {"schema": cal.CALIB_SCHEMA, "amax": "big"},    # malformed
+                "not-a-dict"]:
+        cal._STORE.put(key, bad)
+        assert cal.calibration_entry(g, "stem") is None
+
+
+def test_calibration_is_batch_and_dtype_normalized(rng):
+    """A batch-4 fp32 calibration is found under every bucket size and
+    fallback dtype of the same architecture — the property that lets one
+    warmup serve all bucket programs."""
+    m, params, x, entries = _calibrated_resnet(rng, batch=4)
+    assert set(entries) >= {"stem", "b1c1", "b1c2", "b2c1", "b2c2", "b2proj"}
+    for in_shape, dtype in [((1, 32, 32, 3), "float32"),
+                            ((8, 32, 32, 3), "float32"),
+                            ((4, 32, 32, 3), "bfloat16")]:
+        g = m.graph(in_shape, dtype=dtype)
+        e = cal.calibration_entry(g, "b1c1")
+        assert e is not None and e["amax"] > 0
+        # the recorded spec is wildcarded too: no batch, no dtype
+        assert e["spec"].startswith("n*h") and "-*-" in e["spec"]
+
+
+def test_recalibration_merges_running_max(rng):
+    m = M.resnet_like()
+    params = m.init(jax.random.PRNGKey(0))
+    small = _sample_batch(rng) * 0.1
+    big = _sample_batch(rng) * 10.0
+    gp = m.graph_plan(small.shape)
+    first = cal.Calibrator(small, params).collect(gp)["stem"]
+    merged = cal.Calibrator(big, params).collect(gp)["stem"]
+    assert merged["amax"] >= first["amax"]
+    assert merged["batches"] == first["batches"] + 1
+
+
+# ---------------------------------------------------------------------------
+# the quantize pass: eligibility gates and provenance
+
+def test_quantize_gates_first_last_and_skip(rng):
+    m, params, x, _ = _calibrated_resnet(rng)
+    gp = m.graph_plan(x.shape, precision=QuantPolicy())
+    quantized = {n for n, q in gp.quant.items() if q.quantized}
+    assert quantized == {"b1c1", "b1c2", "b2c1", "b2c2"}
+    assert gp.quant["stem"].source == "fp:first"
+    assert gp.quant["b2proj"].source == "fp:last"
+
+    gp2 = m.graph_plan(x.shape, precision=QuantPolicy(skip=("b1c1",)))
+    assert gp2.quant["b1c1"].source == "fp:skip"
+    assert gp2.quant["b1c2"].quantized
+
+
+def test_uncalibrated_model_stays_fp(rng, tmp_path, monkeypatch):
+    """No calibration on record -> every node falls back to fp and the
+    quantized plan IS the fp plan, numerically."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "empty"))
+    cal.clear_cache()
+    autotune.clear_cache()
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    x = _sample_batch(rng, batch=2, shape=(8, 8, 3))
+    gp = m.graph_plan(x.shape,
+                      precision=QuantPolicy(skip_first_last=False))
+    assert all(q.source == "fp:no-calibration"
+               for q in gp.quant.values())
+    y_fp = m.graph_plan(x.shape,
+                        precision=PrecisionPolicy("float32")).run(x, params)
+    np.testing.assert_allclose(np.asarray(gp.run(x, params)),
+                               np.asarray(y_fp), rtol=1e-5, atol=1e-5)
+
+
+def test_stale_calibration_falls_back_until_recalibrated(rng):
+    """An entry whose recorded spec no longer matches the node is stale:
+    the node serves fp (with provenance saying why) until a fresh
+    calibration pass re-resolves it to int8."""
+    m, params, x, _ = _calibrated_resnet(rng)
+    g = m.graph(x.shape)
+    key = f"{cal.graph_key(g)}/b1c1"
+    stale = dict(cal._STORE.get(key))
+    stale["spec"] = "n*h9w9c9-k9x9m9-s9x9-p9x9-*-none"
+    cal._STORE.put(key, stale)
+
+    gq = m.graph_plan(x.shape, precision=QuantPolicy())
+    assert gq.quant["b1c1"].source == "fp:stale-calibration"
+    assert gq.quant["b1c2"].quantized    # staleness is per-node
+
+    m.graph_plan(x.shape).warmup(calibrate=cal.Calibrator(x, params))
+    gq2 = m.graph_plan(x.shape, precision=QuantPolicy())
+    assert gq2.quant["b1c1"].quantized
+
+
+def test_quant_policy_keys_are_distinct():
+    keys = {QuantPolicy().key(),
+            QuantPolicy(observer="percentile").key(),
+            QuantPolicy(skip_first_last=False).key(),
+            QuantPolicy(skip=("stem",)).key(),
+            PrecisionPolicy("float32").key()}
+    assert len(keys) == 5
+    with pytest.raises(ValueError):
+        QuantPolicy(observer="entropy")
+
+
+# ---------------------------------------------------------------------------
+# the int8 executor
+
+def test_int8_executor_numerics_and_explain(rng):
+    x = jnp.asarray(rng.normal(size=(2, 10, 10, 6)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 6, 5)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(5,)), jnp.float32)
+    spec = cs.ConvSpec.for_conv(x, w, 1, "same", bias=b, activation="relu")
+    q8 = dataclasses.replace(spec, dtype="int8")
+    assert "cuconv_int8" in ex.supporting(q8)
+    plan = cs.plan(q8)
+    assert plan.executor.name == "cuconv_int8"
+    assert "int8" in plan.explain() and "int32" in plan.explain()
+    y_fp = np.asarray(cs.plan(spec)(x, w, b, None), np.float32)
+    y_q = np.asarray(plan(x, w, b, None), np.float32)
+    rel = np.abs(y_q - y_fp).max() / (np.abs(y_fp).max() + 1e-12)
+    assert rel < DEFAULT_BOUND
+
+
+def test_int8_per_channel_weight_scales(rng):
+    """Output channels with wildly different weight magnitudes each get
+    their own scale — a per-tensor weight scale would crush the small
+    channels into one or two int8 codes and fail this bound."""
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 3)), jnp.float32)
+    w = w * jnp.asarray([1e-2, 1.0, 1e2])[None, None, None, :]
+    spec = cs.ConvSpec.for_conv(x, w, 1, "same")
+    y_fp = np.asarray(cs.plan(spec)(x, w, None, None), np.float32)
+    y_q = np.asarray(cs.plan(dataclasses.replace(spec, dtype="int8"))(
+        x, w, None, None), np.float32)
+    for ch in range(3):
+        ref = np.abs(y_fp[..., ch]).max()
+        assert np.abs(y_q[..., ch] - y_fp[..., ch]).max() / ref < 0.05
+
+
+# ---------------------------------------------------------------------------
+# end to end: quantized graphs, accuracy, serving, tuned replay
+
+def test_quantized_resnet_accuracy_and_explain(rng):
+    m, params, x, _ = _calibrated_resnet(rng)
+    rep = assert_accuracy(m, params, x)
+    assert rep["rel_err"] <= DEFAULT_BOUND
+    assert rep["quantized_nodes"] == ["b1c1", "b1c2", "b2c1", "b2c2"]
+    text = m.graph_plan(x.shape, precision=QuantPolicy()).explain()
+    assert "quant[int8<-calib:absmax]" in text
+    # b1c2 is BOTH fused (the residual add rides its epilogue) AND int8
+    assert "fused[add" in text
+
+
+def test_quantized_serving_end_to_end(rng):
+    """The tentpole acceptance: a calibrated resnet_like serves int8
+    through the existing bucket programs, with the serving dtype
+    surfaced per program and output parity with the direct plan."""
+    from repro.serve.cnn import CnnServeEngine, ImageRequest
+    from repro.serve.frontend import AsyncServeFrontend, ServeRequest
+    m, params, x, _ = _calibrated_resnet(rng)
+    pol = QuantPolicy()
+
+    eng = CnnServeEngine(m, params, (32, 32, 3), buckets=(1, 4),
+                         precision=pol)
+    eng.warmup()
+    assert all("int8" in d for d in eng.serve_dtypes().values())
+    eng.submit(ImageRequest(0, x))
+    served = eng.run()
+    want = np.asarray(
+        m.graph_plan(x.shape, precision=pol).run(x, params))
+    np.testing.assert_allclose(served[0].out, want, rtol=1e-5, atol=1e-5)
+
+    fe = AsyncServeFrontend(m, params, {(32, 32, 3): (1, 4)},
+                            precision=pol)
+    fe.warmup()
+    for i in range(3):
+        fe.submit(ServeRequest(rid=i, images=x[i:i + 1]))
+    fe.run()
+    st = fe.stats()
+    assert all("int8" in d
+               for d in st["serve_dtype_by_program"].values())
+    assert sum(c["batches"] for d, c in st["serve_dtypes"].items()
+               if "int8" in d) == st["batches"]
+
+
+def test_int8_tune_full_replays_with_zero_measurement(rng, tmp_path,
+                                                      monkeypatch):
+    """tune='full' persists dtype-distinct int8 configs; a fresh process
+    (fresh model, cleared in-memory caches) replays them without timing
+    a single candidate."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "tuned"))
+    cal.clear_cache()
+    autotune.clear_cache()
+    from repro.core import graph as G
+    G.clear_cache()
+
+    x = _sample_batch(rng, batch=2, shape=(8, 8, 3))
+    pol = QuantPolicy(skip_first_last=False)
+
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    m.graph_plan(x.shape).warmup(calibrate=cal.Calibrator(x, params))
+    gq = m.graph_plan(x.shape, precision=pol)
+    gq.warmup(tune="full")
+    tuned = {n: (p.executor.name, p.config)
+             for n, p in gq.conv_plans.items()}
+    assert all(p.config_source == "measured"
+               for p in gq.conv_plans.values())
+    assert any(name == "cuconv_int8" for name, _ in tuned.values())
+    store = json.loads((tmp_path / "tuned" / "autotune.json").read_text())
+    assert any("-int8-" in k for k in store)
+
+    autotune.clear_cache()
+    G.clear_cache()
+    autotune.reset_measure_stats()
+    m2 = _tiny_model()
+    g2 = m2.graph_plan(x.shape, precision=pol)
+    assert {n: (p.executor.name, p.config)
+            for n, p in g2.conv_plans.items()} == tuned
+    assert autotune.MEASURE_STATS["timed_calls"] == 0
+    np.testing.assert_allclose(np.asarray(g2.run(x, params)),
+                               np.asarray(gq.run(x, params)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batch_trace_dtype_rollup():
+    """Telemetry aggregates per-dtype batch/image counters and omits the
+    section entirely when no dispatcher stamped a dtype."""
+    from repro.serve.telemetry import BatchTrace, Telemetry
+    t = Telemetry()
+    assert "serve_dtypes" not in t.rollup()
+    for dtype, units in [("int8", 4), ("int8", 2), ("float32+int8", 1)]:
+        t.record_batch(BatchTrace(geometry="32x32x3", bucket=4,
+                                  units=units, padded=4 - units,
+                                  transfer_t0=0.0, transfer_t1=0.0,
+                                  dispatch_t=0.0, dtype=dtype))
+    assert t.rollup()["serve_dtypes"] == {
+        "int8": {"batches": 2, "images": 6},
+        "float32+int8": {"batches": 1, "images": 1}}
