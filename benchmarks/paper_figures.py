@@ -10,16 +10,18 @@ distinct configs x (1, 8, 16) batches.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, time_fn
 from repro.configs import cnn_paper as cp
-from repro.core import cuconv as cc
+from repro.core import executors as ex
 from repro.core.convspec import ConvSpec, plan
+
+# our kernels (never counted into the "best library" denominator; the
+# paper's speedup baseline is the best *library* convolution)
+OURS = ("cuconv", "cuconv_two_stage", "direct", "winograd_pallas")
 
 QUICK_SET = [
     # (hw, k, M, C) drawn from the paper's profiled configs + coverage
@@ -37,20 +39,23 @@ QUICK_BATCHES = (1, 8)
 
 
 def _bench_config(hw, k, M, C, batch, rng):
+    """Per-algorithm times through the *registered executor* path
+    (forced plans), so each variant is measured exactly as plan() would
+    deploy it — launch config resolution and epilogue included (the PR 2
+    measure_algorithm contract), not a bare-fn approximation."""
     x = jnp.asarray(rng.normal(size=(batch, hw, hw, C)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(k, k, C, M)), jnp.float32)
-    pad = "same"
-    algos = {
-        "lax": cc.conv_lax,
-        "im2col": cc.conv_im2col,
-        "cuconv": cc.conv_cuconv,
-        "cuconv_two_stage": cc.conv_cuconv_two_stage,
-    }
+    spec = ConvSpec((batch, hw, hw, C), (k, k, C, M), (1, 1),
+                    ((k - 1) // 2, (k - 1) // 2))
+    names = ["lax", "im2col", "cuconv", "cuconv_two_stage", "direct"]
     if k == 3:
-        algos["winograd"] = cc.conv_winograd_or_fallback
+        names += ["winograd", "winograd_pallas"]
     times = {}
-    for name, fn in algos.items():
-        f = jax.jit(functools.partial(fn, stride=1, padding=pad))
+    for name in names:
+        if not ex.get(name).supports(spec)[0]:
+            continue
+        p = plan(spec, force=name)
+        f = jax.jit(lambda xx, ww, _p=p: _p(xx, ww))
         times[name] = time_fn(f, x, w, repeats=3, warmup=1)
     return times
 
@@ -70,14 +75,14 @@ def run(quick=True):
     for (hw, k, M, C) in configs:
         for b in batches:
             t = _bench_config(hw, k, M, C, b, rng)
-            lib_best = min(v for n, v in t.items()
-                           if n not in ("cuconv", "cuconv_two_stage"))
+            lib_best = min(v for n, v in t.items() if n not in OURS)
             speedup = lib_best / t["cuconv"]
             total += 1
             wins += speedup > 1.0
             by_k.setdefault(k, []).append(speedup)
-            wino = (f" winograd={t['winograd']:.0f}us"
-                    if "winograd" in t else "")
+            extra = "".join(f" {n}={t[n]:.0f}us"
+                            for n in ("winograd", "winograd_pallas",
+                                      "direct") if n in t)
             # what the ConvSpec planner would run for this configuration
             p = plan(ConvSpec((b, hw, hw, C), (k, k, C, M), (1, 1),
                               ((k - 1) // 2, (k - 1) // 2)))
@@ -89,7 +94,7 @@ def run(quick=True):
                 f"{hw}-{M}-{C}-b{b}", t["cuconv"],
                 f"speedup={speedup:.2f} lax={t['lax']:.0f}us "
                 f"im2col={t['im2col']:.0f}us "
-                f"two_stage={t['cuconv_two_stage']:.0f}us" + wino + chosen))
+                f"two_stage={t['cuconv_two_stage']:.0f}us" + extra + chosen))
     for k, sp in sorted(by_k.items()):
         rows.append(csv_row(
             f"fig567/summary_{k}x{k}", 0.0,

@@ -4,7 +4,10 @@ Times our stage-1 / stage-2 split (the paper's scalar_prods_kernel /
 sum_kernel) against the library and explicit-GEMM baselines, plus the
 beyond-paper fused variant — reproducing the tables' structure: for 1x1
 configs stage 2 is absent; for KxK the paper found stage 1 dominates
-(91-99 %) and stage 2 is the small remainder.
+(91-99 %) and stage 2 is the small remainder.  The PR-10 executors
+(tiled Pallas winograd, im2col-free direct) and the jnp winograd
+reference add per-variant rows on the configs they support, timed
+through forced plans so each is measured exactly as deployed.
 
 Besides the CSV rows, every run writes ``BENCH_table345.json``
 (benchmarks/common.write_json): one machine-readable record per
@@ -25,6 +28,7 @@ from benchmarks.common import csv_row, time_fn, write_json
 from repro.configs.cnn_paper import PROFILED
 from repro.core import convspec as cs
 from repro.core import cuconv as cc
+from repro.core import executors as ex
 from repro.quant.accuracy import spec_accuracy
 
 
@@ -71,6 +75,31 @@ def run(quick=True):
                             f"fusion_gain={(t1+t2)/max(t_fused,1e-9):.2f}x"))
         rows.append(csv_row(f"t345/{label}/library", t_lax, ""))
         rows.append(csv_row(f"t345/{label}/im2col_gemm", t_im2col, ""))
+        config = f"{hw}x{hw}x{C} b{batch} k{k} m{M}"
+        # PR-10 executors (and the jnp winograd reference), timed through
+        # forced plans so launch-config resolution + epilogue are included
+        # exactly as plan() deploys them
+        alt = {}
+        for name in ("winograd", "winograd_pallas", "direct"):
+            exe = ex.get(name)
+            if not exe.supports(spec)[0]:
+                continue
+            p = cs.plan(spec, force=name)
+            t_alt = time_fn(jax.jit(lambda xx, ww, _p=p: _p(xx, ww)),
+                            x, w, repeats=3, warmup=1)
+            alt[name] = (t_alt, p)
+            rows.append(csv_row(
+                f"t345/{label}/{name}", t_alt,
+                f"cfg[{p.config_source}]="
+                f"{p.config.key() if p.config else '-'} "
+                f"vs_library={t_lax / max(t_alt, 1e-9):.2f}x"))
+            records.append({
+                "name": f"t345/{label}/{name}", "config": config,
+                "dtype": "float32", "us": t_alt,
+                "planned": {
+                    "algorithm": p.algorithm, "source": p.source,
+                    "config": p.config.as_dict() if p.config else {},
+                    "config_source": p.config_source}})
         # beyond-paper int8 variant: the quantized executor on the same
         # configuration (dynamic activation scale — no calibration in a
         # per-call benchmark), with its per-layer accuracy delta vs fp32
@@ -82,7 +111,6 @@ def run(quick=True):
             f"t345/{label}/int8", t_int8,
             f"{plan8.algorithm} rel_err={acc8['rel_err']:.4f} "
             f"vs_library={t_lax / max(t_int8, 1e-9):.2f}x"))
-        config = f"{hw}x{hw}x{C} b{batch} k{k} m{M}"
         for variant, us in (("stage1", t1), ("stage2", t2),
                             ("fused", t_fused), ("library", t_lax),
                             ("im2col_gemm", t_im2col)):

@@ -203,6 +203,30 @@ def conv_cuconv_two_stage_pallas(x, w, stride=1, padding: Pad = "same",
     return ops.cuconv_two_stage(x, w, (ph, pw), interpret=interpret)
 
 
+def conv_winograd_pallas(x, w, stride=1, padding: Pad = "same",
+                         interpret: Optional[bool] = None):
+    """Tiled Pallas Winograd F(m,3) kernel (3x3 stride-1 only;
+    policy-free executor — the F(m,3) variant and tile geometry come
+    from the plan's launch config, default F(2x2,3x3))."""
+    if (w.shape[0] != 3 or w.shape[1] != 3
+            or _norm_stride(stride) != (1, 1)):
+        raise ValueError("winograd_pallas needs 3x3 stride-1; "
+                         "plan() routes other specs elsewhere")
+    from repro.kernels import ops
+    ph, pw = _norm_pad(padding, 3, 3)
+    return ops.winograd_fused(x, w, (ph, pw), interpret=interpret)
+
+
+def conv_direct(x, w, stride=1, padding: Pad = "same",
+                interpret: Optional[bool] = None):
+    """Im2col-free direct Pallas conv (Li et al. 1610.03618):
+    channel-tiled VMEM accumulation, no patch matrix, any stride."""
+    from repro.kernels import ops
+    kh, kw = w.shape[0], w.shape[1]
+    return ops.direct_conv(x, w, _norm_pad(padding, kh, kw),
+                           _norm_stride(stride), interpret=interpret)
+
+
 def conv_winograd_or_fallback(x, w, stride=1, padding: Pad = "same"):
     """Winograd F(2x2,3x3) for 3x3/stride-1, library conv otherwise —
     mirrors cuDNN exposing Winograd only where it is defined."""

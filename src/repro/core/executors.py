@@ -612,9 +612,12 @@ class WinogradExecutor(Executor):
     def extra_hbm_bytes(self, spec):
         n, oh, ow, m = spec.out_shape
         c = spec.in_shape[3]
-        # 16 Winograd-domain tiles per 2x2 output block, f32
+        itemsize = jnp.dtype(spec.dtype).itemsize
+        # 16 positions per 2x2 output block: the gathered input tiles /
+        # written output tiles transit at the spec dtype; the Winograd-
+        # domain tensors (V, M) genuinely stay f32 (4 bytes)
         tiles = n * ((oh + 1) // 2) * ((ow + 1) // 2) * 16
-        return 2.0 * tiles * (c + m) * 4
+        return tiles * (c + m) * (itemsize + 4.0)
 
     def _execute(self, spec, x, w, bias, interpret):
         from repro.core.winograd import conv_winograd
@@ -924,6 +927,222 @@ class FusedPallasExecutor(Executor):
             interpret=interpret)
 
 
+# Winograd-Pallas launch candidates: (tt, tm, tc) tile triples tried
+# under both F(m,3) variants.  Candidate 0 under m=2 is the kernel's
+# shipped default geometry; the smaller triples keep the F(4,3) domain
+# (36 positions vs 16) inside the VMEM budget on big-channel specs.
+_WINO_TILES = (
+    (128, 128, 128),
+    (256, 128, 128),
+    (128, 256, 128),
+    (128, 128, 256),
+    (128, 128, 64),
+    (64, 128, 64),
+    (64, 256, 128),
+)
+
+
+class WinogradPallasExecutor(Executor):
+    """Tiled Pallas Winograd F(m,3): the whole Winograd domain —
+    B^T d B transform, per-position channel GEMMs, fp32 accumulator,
+    A^T m A inverse, bias/ReLU/residual epilogue — lives in VMEM inside
+    one kernel (kernels/winograd_pallas.py), where the pure-jnp
+    ``winograd`` executor round-trips every domain tensor through HBM.
+
+    Tuning space: ``m`` (the F(m,3) variant — F(2x2,3x3) with 16 tile
+    positions and 2.25x multiply savings, or F(4x4,3x3) with 36
+    positions and 4x savings at looser numerics), ``tt`` (tiles per
+    block), ``tm``/``tc`` (output/input channel tiles).  The variant is
+    a *config dim*, so ``tune="full"`` arbitrates F(2,3) vs F(4,3) per
+    spec and the winner persists like any other launch config.
+    """
+    name = "winograd_pallas"
+    fuses_epilogue = True
+    takes_interpret = True
+    tunable = ("m", "tt", "tm", "tc")
+
+    def fusions(self, spec):
+        # the residual add folds into the in-kernel epilogue (the
+        # addend rides the output-tile layout); pool does not
+        return ("add",)
+
+    def _supports(self, spec):
+        if spec.filter_shape[:2] != (3, 3) or not spec.unit_stride:
+            return False, "Winograd F(m,3) needs 3x3 stride-1"
+        if not any(self.config_supports(spec, c)[0]
+                   for c in self.configs(spec)):
+            return False, ("no Winograd tile candidate fits the VMEM "
+                           "budget for this spec")
+        return True, "3x3 stride-1: tiled Pallas Winograd"
+
+    def _tile_counts(self, spec, fm):
+        n, oh, ow, m = spec.out_shape
+        return n * (-(-oh // fm)) * (-(-ow // fm)), m, spec.filter_shape[2]
+
+    def configs(self, spec):
+        cands = []
+        for fm in (2, 4):
+            p, m, c = self._tile_counts(spec, fm)
+            for tt, tm, tc in _WINO_TILES:
+                cands.append({"m": fm, "tt": min(tt, p),
+                              "tm": min(tm, m), "tc": min(tc, c)})
+        return _dedup_configs(cands)
+
+    def _config_supports(self, spec, config):
+        fm = config.get("m", 2)
+        if fm not in (2, 4):
+            return False, (f"F(m,3) variant must be m=2 or m=4; "
+                           f"got m={fm}")
+        return True, "config geometry ok"
+
+    def vmem_bytes(self, spec, config=None):
+        from repro.kernels.winograd_pallas import vmem_bytes
+        cfg = LaunchConfig.of(config)
+        return vmem_bytes(spec.in_shape, spec.filter_shape,
+                          m=cfg.get("m", 2), tt=cfg.get("tt", 128),
+                          tm=cfg.get("tm", 128), tc=cfg.get("tc", 128),
+                          itemsize=jnp.dtype(spec.dtype).itemsize,
+                          bias=spec.has_bias,
+                          addend=spec.fused_add != "none")
+
+    def config_cost(self, spec, config):
+        fm = config.get("m", 2)
+        p, m, c = self._tile_counts(spec, fm)
+        tt = min(config.get("tt", 128), p)
+        tm = min(config.get("tm", 128), m)
+        tc = min(config.get("tc", 128), c)
+        steps = (-(-p // tt)) * (-(-m // tm)) * (-(-c // tc))
+        # (m+2)^2 per-position GEMMs per step: F(4,3) quarters the tile
+        # count but grows the position count 16 -> 36, netting ~0.56x —
+        # the model prefers it wherever it stays VMEM-feasible
+        return steps * (fm + 2) ** 2
+
+    def flop_cost(self, spec):
+        # 2.25x fewer multiplies than direct under the conservative
+        # F(2,3) variant (F(4,3), when tuned in, saves 4x)
+        return super().flop_cost(spec) / 2.25
+
+    def extra_hbm_bytes(self, spec):
+        n, oh, ow, m = spec.out_shape
+        c = spec.filter_shape[2]
+        itemsize = jnp.dtype(spec.dtype).itemsize
+        p = n * ((oh + 1) // 2) * ((ow + 1) // 2)
+        # gathered input-tile tensor + output-tile tensor (written, then
+        # re-read by the scatter) at the spec dtype; the transformed
+        # filters (f32) are small and reused — the Winograd-domain
+        # tensors themselves never leave VMEM (the point of the kernel)
+        return (2.0 * p * 16 * c * itemsize + 2.0 * 16 * c * m * 4
+                + 2.0 * p * 4 * m * itemsize)
+
+    def heuristic_claim(self, spec, backend):
+        if backend != "tpu" or spec.has_fusion:
+            return None
+        if not _is_small(spec):
+            return 82, "large 3x3: tiled Pallas Winograd (fig. 6 region)"
+        return None
+
+    def _execute(self, spec, x, w, bias, interpret, config=None,
+                 addend=None):
+        from repro.kernels import ops
+        cfg = LaunchConfig.of(config)
+        if spec.fused_add != "none":
+            relu = spec.fused_add == "add_relu"    # post-add activation
+        else:
+            relu = spec.wants_relu
+        return ops.winograd_fused(
+            x, w, spec.padding,
+            bias=bias if spec.has_bias else None,
+            activation="relu" if relu else None,
+            addend=addend, m=cfg.get("m", 2), tt=cfg.get("tt", 128),
+            tm=cfg.get("tm", 128), tc=cfg.get("tc", 128),
+            interpret=interpret)
+
+
+# Direct-conv launch candidates: (tm, tc) output/input channel tiles.
+# Candidate 0 is the kernel's shipped default geometry.
+_DIRECT_TILES = (
+    (128, 256),
+    (128, 128),
+    (256, 128),
+    (128, 512),
+    (256, 256),
+    (64, 64),
+    (512, 128),
+)
+
+
+class DirectConvExecutor(Executor):
+    """Im2col-free direct conv (Li et al. 1610.03618): channel-tiled
+    fp32 VMEM accumulation, KH*KW taps unrolled in-kernel, no patch
+    matrix and no per-tap HBM temporaries (kernels/direct_conv.py).
+
+    Because the contraction is grid-tiled by ``tc``, the VMEM working
+    set is bounded for arbitrarily large C — the memory-efficiency
+    lever that makes this the registry's large-C backstop where the
+    patch matrix (im2col) and full-C row staging (fused kernel) both
+    blow up.  ``extra_hbm_bytes`` is near zero by construction: the
+    only re-traffic is re-reading the input once per output-channel
+    tile.
+    """
+    name = "direct"
+    takes_interpret = True
+    tunable = ("tm", "tc")
+
+    def _supports(self, spec):
+        if not any(self.config_supports(spec, c)[0]
+                   for c in self.configs(spec)):
+            return False, ("no channel-tiled candidate fits the VMEM "
+                           "budget (spatial staging too large)")
+        return True, "im2col-free direct conv (channel-tiled VMEM)"
+
+    def configs(self, spec):
+        m, c = spec.filter_shape[3], spec.filter_shape[2]
+        return _dedup_configs({"tm": min(tm, m), "tc": min(tc, c)}
+                              for tm, tc in _DIRECT_TILES)
+
+    def vmem_bytes(self, spec, config=None):
+        from repro.kernels.direct_conv import vmem_bytes
+        cfg = LaunchConfig.of(config)
+        return vmem_bytes(spec.in_shape, spec.filter_shape,
+                          stride=spec.stride, pad=spec.padding,
+                          tm=cfg.get("tm", 128), tc=cfg.get("tc", 256),
+                          itemsize=jnp.dtype(spec.dtype).itemsize)
+
+    def config_cost(self, spec, config):
+        n = spec.in_shape[0]
+        kh, kw, c, m = spec.filter_shape
+        tm = min(config.get("tm", 128), m)
+        tc = min(config.get("tc", 256), c)
+        return n * (-(-m // tm)) * (-(-c // tc)) * kh * kw
+
+    def extra_hbm_bytes(self, spec):
+        n, h, w_, c = spec.in_shape
+        itemsize = jnp.dtype(spec.dtype).itemsize
+        # the input is re-read once per output-channel tile beyond the
+        # first (default tm=128) — the whole im2col-free saving
+        retiles = -(-spec.filter_shape[3] // 128) - 1
+        return float(retiles * n * h * w_ * c * itemsize)
+
+    def heuristic_claim(self, spec, backend):
+        if backend != "tpu" or spec.has_fusion or spec.is_1x1:
+            return None
+        if spec.filter_shape[2] >= 256:
+            # a modest claim: wins the large-C region exactly where no
+            # higher-priority kernel claims (e.g. the fused kernel's
+            # full-C staging refused on VMEM, or large-C strided/5x5
+            # shapes), the memory-bound frontier of Li et al.
+            return 45, "large-C: im2col-free direct path (Li et al.)"
+        return None
+
+    def _execute(self, spec, x, w, bias, interpret, config=None):
+        from repro.kernels import ops
+        cfg = LaunchConfig.of(config)
+        return ops.direct_conv(x, w, spec.padding, stride=spec.stride,
+                               tm=cfg.get("tm", 128),
+                               tc=cfg.get("tc", 256),
+                               interpret=interpret)
+
+
 class Int8PallasExecutor(Executor):
     """Int8 inference executor: symmetric quantization in, int8 x int8
     -> **int32** accumulation on the MXU integer path, fp32
@@ -1056,7 +1275,9 @@ def _register_builtins() -> None:
             (Conv1x1PallasExecutor(), cuconv.conv_conv1x1_pallas),
             (TwoStagePallasExecutor(), cuconv.conv_cuconv_two_stage_pallas),
             (CuconvExecutor(), cuconv.conv_cuconv),
-            (FusedPallasExecutor(), cuconv.conv_cuconv_pallas)):
+            (FusedPallasExecutor(), cuconv.conv_cuconv_pallas),
+            (WinogradPallasExecutor(), cuconv.conv_winograd_pallas),
+            (DirectConvExecutor(), cuconv.conv_direct)):
         ex.fn = fn
         register(ex)
     # no bare-fn surface: the quantize/dequantize epilogue only makes

@@ -1,21 +1,28 @@
-"""Winograd F(2x2, 3x3) convolution — the paper's strongest competitor.
+"""Winograd F(m, 3) convolution — the paper's strongest competitor.
 
 cuDNN's Winograd variants dominate the paper's 3x3 configurations
 (fig. 6; "in around 40% of the cases the second highest performing
 variant is at least 50% slower than one of the two Winograd variants"),
 so a faithful baseline set needs a real Winograd, not just lax.conv.
 
-Lavin & Gray 2015 minimal filtering: each 4x4 input tile (2x2 output,
-overlap 2) is transformed with B^T d B, filters once with G g G^T, the
-elementwise products accumulate over channels, and A^T m A produces the
-2x2 output tile — 2.25x fewer multiplies than direct conv at the price
-of the transforms, which is exactly the trade-off the paper discusses
-(transform overhead dominates at small computational loads, cuConv's
-winning region).
+Lavin & Gray 2015 minimal filtering: each (m+2)x(m+2) input tile
+(m x m output, overlap 2) is transformed with B^T d B, filters once
+with G g G^T, the elementwise products accumulate over channels, and
+A^T m A produces the m x m output tile.  F(2x2,3x3) saves 2.25x
+multiplies over direct conv, F(4x4,3x3) saves 4x, at the price of the
+transforms — exactly the trade-off the paper discusses (transform
+overhead dominates at small computational loads, cuConv's winning
+region).  The F(4x4,3x3) transform constants are larger (the G rows
+carry 1/24-scale entries against A^T rows up to 8), so its numeric
+error is measurably bigger; tests/test_winograd.py pins both bounds.
+
+This module owns the transform matrices — ``matrices(m)`` is the one
+home both the pure-jnp path below and the tiled Pallas kernel
+(kernels/winograd_pallas.py) read them from.
 
 Pure-jnp implementation (stride 1, 3x3 filters; the tile-batched
-elementwise product is a (tiles x C) @ (C x M) GEMM per of the 16 tile
-positions — MXU-friendly on the TPU target).
+elementwise product is a (tiles x C) @ (C x M) GEMM per of the (m+2)^2
+tile positions — MXU-friendly on the TPU target).
 """
 from __future__ import annotations
 
@@ -35,17 +42,50 @@ _G = np.array([[1, 0, 0],
 _AT = np.array([[1, 1, 1, 0],
                 [0, 1, -1, -1]], np.float32)
 
+# F(4x4, 3x3) transform matrices (Lavin & Gray, the cuDNN winograd_4x4
+# variant's points {0, ±1, ±2})
+_BT4 = np.array([[4, 0, -5, 0, 1, 0],
+                 [0, -4, -4, 1, 1, 0],
+                 [0, 4, -4, -1, 1, 0],
+                 [0, -2, -1, 2, 1, 0],
+                 [0, 2, -1, -2, 1, 0],
+                 [0, 4, 0, -5, 0, 1]], np.float32)
+_G4 = np.array([[1 / 4, 0, 0],
+                [-1 / 6, -1 / 6, -1 / 6],
+                [-1 / 6, 1 / 6, -1 / 6],
+                [1 / 24, 1 / 12, 1 / 6],
+                [1 / 24, -1 / 12, 1 / 6],
+                [0, 0, 1]], np.float32)
+_AT4 = np.array([[1, 1, 1, 1, 1, 0],
+                 [0, 1, -1, 2, -2, 0],
+                 [0, 1, 1, 4, 4, 0],
+                 [0, 1, -1, 8, -8, 1]], np.float32)
 
-def transform_filters(w):
-    """w: (3, 3, C, M) -> (4, 4, C, M): U = G g G^T per (C, M)."""
-    G = jnp.asarray(_G)
+#: F(m, 3) variant -> (B^T, G, A^T) as numpy f32 constants
+MATRICES = {2: (_BT, _G, _AT), 4: (_BT4, _G4, _AT4)}
+
+
+def matrices(m: int):
+    """``(B^T, G, A^T)`` for the F(m x m, 3 x 3) variant; m in {2, 4}."""
+    try:
+        return MATRICES[m]
+    except KeyError:
+        raise ValueError(f"Winograd F(m,3) variant must be one of "
+                         f"{sorted(MATRICES)}; got m={m}") from None
+
+
+def transform_filters(w, m: int = 2):
+    """w: (3, 3, C, M) -> (m+2, m+2, C, M): U = G g G^T per (C, M)."""
+    G = jnp.asarray(matrices(m)[1])
     return jnp.einsum("ij,jkcm,lk->ilcm", G, w, G)
 
 
-def conv_winograd(x, w, stride=1, padding="same"):
+def conv_winograd(x, w, stride=1, padding="same", m: int = 2):
     """x: (N, H, W, C) NHWC; w: (3, 3, C, M); stride must be 1."""
-    assert w.shape[0] == 3 and w.shape[1] == 3, "F(2x2,3x3) needs 3x3 filters"
+    assert w.shape[0] == 3 and w.shape[1] == 3, "F(m,3) needs 3x3 filters"
     assert stride == 1, "Winograd baseline is stride-1 (as in the paper)"
+    BT, _, AT = (jnp.asarray(t) for t in matrices(m))
+    a = m + 2                                   # input-tile edge
     N, H, W, C = x.shape
     M = w.shape[3]
     if padding == "same":
@@ -56,25 +96,23 @@ def conv_winograd(x, w, stride=1, padding="same"):
         ph, pw = (padding, padding) if isinstance(padding, int) else padding
     OH, OW = H + 2 * ph - 2, W + 2 * pw - 2
 
-    # pad so output tiles of 2x2 cover OH x OW exactly
-    th, tw = (OH + 1) // 2, (OW + 1) // 2
-    Hp, Wp = 2 * th + 2, 2 * tw + 2
+    # pad so output tiles of m x m cover OH x OW exactly
+    th, tw = -(-OH // m), -(-OW // m)
+    Hp, Wp = m * th + 2, m * tw + 2
     xp = jnp.pad(x, ((0, 0), (ph, Hp - H - ph), (pw, Wp - W - pw), (0, 0)))
 
-    # gather 4x4 input tiles with stride 2 (overlap 2): (N, th, tw, 4, 4, C)
-    i_idx = (2 * jnp.arange(th))[:, None] + jnp.arange(4)[None, :]   # (th,4)
-    j_idx = (2 * jnp.arange(tw))[:, None] + jnp.arange(4)[None, :]   # (tw,4)
-    tiles = xp[:, i_idx][:, :, :, j_idx]            # (N, th, 4, tw, 4, C)
-    tiles = tiles.transpose(0, 1, 3, 2, 4, 5)       # (N, th, tw, 4, 4, C)
+    # gather a x a input tiles with stride m (overlap 2)
+    i_idx = (m * jnp.arange(th))[:, None] + jnp.arange(a)[None, :]  # (th,a)
+    j_idx = (m * jnp.arange(tw))[:, None] + jnp.arange(a)[None, :]  # (tw,a)
+    tiles = xp[:, i_idx][:, :, :, j_idx]            # (N, th, a, tw, a, C)
+    tiles = tiles.transpose(0, 1, 3, 2, 4, 5)       # (N, th, tw, a, a, C)
 
-    BT = jnp.asarray(_BT)
     V = jnp.einsum("ij,nhwjkc,lk->nhwilc", BT, tiles.astype(jnp.float32), BT)
-    U = transform_filters(w.astype(jnp.float32))    # (4, 4, C, M)
+    U = transform_filters(w.astype(jnp.float32), m)  # (a, a, C, M)
 
-    # elementwise product in the Winograd domain == 16 channel GEMMs
-    Mdom = jnp.einsum("nhwijc,ijcm->nhwijm", V, U)  # (N, th, tw, 4, 4, M)
+    # elementwise product in the Winograd domain == a*a channel GEMMs
+    Mdom = jnp.einsum("nhwijc,ijcm->nhwijm", V, U)  # (N, th, tw, a, a, M)
 
-    AT = jnp.asarray(_AT)
-    Y = jnp.einsum("ij,nhwjkm,lk->nhwilm", AT, Mdom, AT)  # (..., 2, 2, M)
-    out = Y.transpose(0, 1, 3, 2, 4, 5).reshape(N, 2 * th, 2 * tw, M)
+    Y = jnp.einsum("ij,nhwjkm,lk->nhwilm", AT, Mdom, AT)  # (..., m, m, M)
+    out = Y.transpose(0, 1, 3, 2, 4, 5).reshape(N, m * th, m * tw, M)
     return out[:, :OH, :OW, :].astype(x.dtype)

@@ -13,8 +13,9 @@ import jax.numpy as jnp
 
 from repro.kernels import (conv1x1 as _c1, cuconv_stage1 as _s1,
                            cuconv_stage2 as _s2, cuconv_fused as _cf,
-                           conv1d_tap as _c1d, flash_attention as _fa,
-                           int8_gemm as _i8)
+                           conv1d_tap as _c1d, direct_conv as _dcv,
+                           flash_attention as _fa, int8_gemm as _i8,
+                           winograd_pallas as _wg)
 
 
 from repro.core.convspec import normalize_stride as _norm_stride  # one home
@@ -92,6 +93,32 @@ def cuconv_fused(x, w, padding=(0, 0), stride=1, bias=None, activation=None,
                             addend=addend,
                             pool=tuple(pool) if pool is not None else None,
                             tm=tm, rows=rows,
+                            interpret=_auto_interpret(interpret))
+
+
+def winograd_fused(x, w, padding=(1, 1), bias=None, activation=None,
+                   addend=None, m=2, tt=128, tm=128, tc=128,
+                   interpret=None):
+    """Tiled Pallas Winograd F(m,3) conv (3x3, stride 1) with fused
+    bias/activation/residual epilogue.
+
+    Policy-free executor: the F(m,3) variant ``m`` and the ``tt/tm/tc``
+    tiles are the winograd_pallas launch config (core.convspec.plan
+    owns which specs take this path; see kernels/winograd_pallas.py).
+    """
+    return _wg.winograd_fused(x, w, tuple(padding), bias=bias,
+                              activation=activation, addend=addend,
+                              m=m, tt=tt, tm=tm, tc=tc,
+                              interpret=_auto_interpret(interpret))
+
+
+def direct_conv(x, w, padding=(0, 0), stride=(1, 1), tm=128, tc=256,
+                interpret=None):
+    """Im2col-free direct conv (Li et al. 1610.03618): channel-tiled
+    fp32 VMEM accumulation, no patch-matrix materialization.  Any
+    stride; ``tm/tc`` are the direct executor's launch config."""
+    return _dcv.direct_conv(x, w, tuple(padding), _norm_stride(stride),
+                            tm=tm, tc=tc,
                             interpret=_auto_interpret(interpret))
 
 

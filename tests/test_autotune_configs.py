@@ -59,7 +59,8 @@ T3_A = cs.ConvSpec((1, 7, 7, 832), (1, 1, 832, 256))
 T4_A = cs.ConvSpec((1, 7, 7, 192), (3, 3, 192, 384), (1, 1), (1, 1))
 T4_B = cs.ConvSpec((1, 13, 13, 384), (3, 3, 384, 384), (1, 1), (1, 1))
 
-PALLAS = ("cuconv_pallas", "cuconv_two_stage_pallas", "conv1x1_pallas")
+PALLAS = ("cuconv_pallas", "cuconv_two_stage_pallas", "conv1x1_pallas",
+          "winograd_pallas", "direct")
 
 
 def _spec(geom, dtype="float32"):
@@ -101,12 +102,21 @@ def test_candidate_zero_is_the_historical_geometry():
     assert ts.as_dict() == {"tp": 49, "tm": 128, "tc": 192}   # tp clamped
     one = ex.get("conv1x1_pallas").configs(T3_A)[0]
     assert one.as_dict() == {"tp": 49, "tm": 128, "tc": 512}
+    # winograd_pallas candidate 0 is the F(2,3) variant at the default
+    # tiles (tt clamped to the spec's tile count: 1 * ceil(7/2)^2 = 16)
+    wg = ex.get("winograd_pallas").configs(T4_A)[0]
+    assert wg.as_dict() == {"m": 2, "tt": 16, "tm": 128, "tc": 128}
+    # direct candidate 0: default (tm, tc) clamped to (M, C)
+    dc = ex.get("direct").configs(T4_A)[0]
+    assert dc.as_dict() == {"tm": 128, "tc": 192}
 
 
 @pytest.mark.parametrize("name,spec", [
     ("cuconv_pallas", T4_A), ("cuconv_pallas", T4_B),
     ("cuconv_two_stage_pallas", T4_A), ("cuconv_two_stage_pallas", T4_B),
     ("conv1x1_pallas", T3_A),
+    ("winograd_pallas", T4_A), ("winograd_pallas", T4_B),
+    ("direct", T4_B), ("direct", T3_A),
 ])
 def test_pallas_executors_expose_three_feasible_candidates(name, spec):
     """Acceptance: >= 3 VMEM-feasible candidate configs per Pallas
@@ -196,6 +206,25 @@ def test_forced_infeasible_config_raises_naming_executor_config_spec():
         cs.plan(spec, force="lax", config={"tm": 128})
 
 
+def test_forced_infeasible_config_raises_for_new_executors():
+    """The PR-10 executors honor the same loud-raise contract: a forced
+    config outside the tuning space names executor, config and spec."""
+    # F(m,3) variant is a config dim but only m in {2, 4} exists
+    with pytest.raises(ValueError) as e:
+        cs.plan(T4_A, force="winograd_pallas",
+                config={"m": 3, "tt": 16, "tm": 128, "tc": 128})
+    msg = str(e.value)
+    assert "winograd_pallas" in msg and "m=3" in msg and T4_A.key() in msg
+    # oversized tiles blow the (unclamped) VMEM model and are refused
+    with pytest.raises(ValueError, match="VMEM"):
+        cs.plan(T4_B, force="winograd_pallas",
+                config={"m": 4, "tt": 512, "tm": 512, "tc": 512})
+    with pytest.raises(ValueError) as e:
+        cs.plan(T4_B, force="direct", config={"tm": 512, "tc": 512})
+    msg = str(e.value)
+    assert "direct" in msg and "VMEM" in msg and T4_B.key() in msg
+
+
 def test_forced_valid_config_rides_the_plan(rng):
     spec = _spec(GEOMS[0])
     p = cs.plan(spec, force="cuconv_pallas", config={"tm": 4, "rows": 2})
@@ -222,6 +251,24 @@ def test_stale_persisted_config_is_reresolved_not_served():
     ok, _ = ex.get("cuconv_pallas").config_supports(spec, p.config)
     assert ok
     assert p.config.get("rows", 1) <= spec.out_shape[1]
+
+
+@pytest.mark.parametrize("name,spec,stale", [
+    ("winograd_pallas", T4_A, {"m": 3, "tt": 16, "tm": 128, "tc": 128}),
+    ("winograd_pallas", T4_B, {"m": 4, "tt": 512, "tm": 512, "tc": 512}),
+    ("direct", T4_B, {"tm": 512, "tc": 512}),
+])
+def test_stale_persisted_config_self_heals_for_new_executors(name, spec,
+                                                             stale):
+    """PR-5 contract extends to the PR-10 executors: an invalid persisted
+    config (schema drift, VMEM-model tightening) is dropped at resolve
+    time and the winner re-serves on its default config."""
+    autotune.record_best(spec, "cpu", name, config=stale)
+    p = cs.plan(spec, backend="cpu", force=name)
+    assert p.algorithm == name
+    assert p.config_source == "default"
+    ok, why = ex.get(name).config_supports(spec, p.config)
+    assert ok, why
 
 
 def test_config_never_leaks_across_algorithms():

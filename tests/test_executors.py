@@ -111,6 +111,30 @@ def test_executor_numerics_conform_to_declared_capabilities(rng, name,
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("fused_add", ["add", "add_relu"])
+def test_winograd_pallas_fuses_residual_add_in_kernel(rng, dtype,
+                                                      fused_add):
+    """winograd_pallas declares fusions() = ('add',): the residual
+    operand is applied in VMEM after the inverse transform.  Forced on a
+    fused-add spec, the planned execution matches conv + add (+ relu)."""
+    import dataclasses
+    base = _spec(SWEEP[0], dtype)                       # 3x3 s1 bias_relu
+    spec = dataclasses.replace(base, epilogue="bias", fused_add=fused_add)
+    exe = ex.get("winograd_pallas")
+    ok, why = exe.supports(spec)
+    assert ok, why
+    x, w, b = _operands(spec, rng)
+    ad = jnp.asarray(rng.normal(size=spec.out_shape), jnp.float32) \
+        .astype(jnp.dtype(dtype))
+    p = cs.plan(spec, force="winograd_pallas")
+    got = np.asarray(p(x, w, b, addend=ad), np.float32)
+    want = _f32_ref(spec, x, w, b) + np.asarray(ad, np.float32)
+    if fused_add == "add_relu":
+        want = np.maximum(want, 0.0)
+    np.testing.assert_allclose(got, want, **TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
 def test_bf16_inputs_accumulate_fp32(rng, dtype):
     """Every executor declares fp32 accumulation; check it holds: a
     reduction long enough to drift under bf16 accumulation stays close

@@ -1,15 +1,19 @@
-"""Numeric tests for the dormant F(2x2, 3x3) Winograd path.
+"""Numeric tests for the reference Winograd decompositions.
 
-core/winograd.py predates the executor registry's pallas-backed
-winograd and stays as the reference decomposition; these tests pin it
-against ``lax.conv_general_dilated`` so the module can't rot silently.
+core/winograd.py is the one home of the F(2x2,3x3) and F(4x4,3x3)
+transform matrices — the pure-jnp reference path here and the Pallas
+winograd_pallas executor both read them.  These tests pin both
+variants against ``lax.conv_general_dilated`` so the module can't rot
+silently.  F(4,3) has larger transform constants (powers up to 8 in
+A^T), so its numeric bound is looser than F(2,3)'s — the same
+trade-off the executor's tuning space exposes as the ``m`` config dim.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.winograd import conv_winograd
+from repro.core.winograd import conv_winograd, matrices
 
 
 def _conv_ref(x, w, padding):
@@ -50,6 +54,46 @@ def test_winograd_bf16_inputs(rng):
     want = _conv_ref(x.astype(jnp.float32), w.astype(jnp.float32), "same")
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("padding", ["same", "valid", (2, 1)])
+@pytest.mark.parametrize("shape", [(1, 8, 8, 3, 4), (2, 9, 7, 5, 6),
+                                   (1, 13, 13, 8, 8)])
+def test_winograd_f4_matches_lax(rng, padding, shape):
+    """F(4x4,3x3): 4x multiply savings, 6x6 transforms.  The inverse
+    transform's +-8 coefficients amplify rounding, so the bound is an
+    order looser than F(2,3)'s — still well inside 1e-3 relative."""
+    n, h, w_, c, m = shape
+    x = jnp.asarray(rng.standard_normal((n, h, w_, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, c, m)), jnp.float32)
+    got = conv_winograd(x, w, padding=padding, m=4)
+    want = _conv_ref(x, w, padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_winograd_f4_agrees_with_f2(rng):
+    """Both variants compute the same convolution; they differ only in
+    tile size and rounding."""
+    x = jnp.asarray(rng.standard_normal((1, 10, 10, 4)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 4, 8)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(conv_winograd(x, w, m=2)),
+        np.asarray(conv_winograd(x, w, m=4)), rtol=2e-3, atol=2e-3)
+
+
+def test_matrices_shapes_and_invalid_m():
+    for m in (2, 4):
+        bt, g, at = matrices(m)
+        assert bt.shape == (m + 2, m + 2)
+        assert g.shape == (m + 2, 3)
+        assert at.shape == (m, m + 2)
+    with pytest.raises(ValueError, match="got m=3"):
+        matrices(3)
+    with pytest.raises(ValueError, match="got m=3"):
+        conv_winograd(jnp.zeros((1, 8, 8, 3), jnp.float32),
+                      jnp.zeros((3, 3, 3, 4), jnp.float32), m=3)
 
 
 def test_winograd_rejects_non3x3_and_stride():
